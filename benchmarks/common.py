@@ -1,0 +1,34 @@
+"""Benchmark harness utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time in microseconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def record(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def emit_header() -> None:
+    print("name,us_per_call,derived")

@@ -1,0 +1,38 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+  logreg        §2.3 running example — RA-autodiff overhead vs jax.grad
+  gcn           Tables 2–3 — GCN per-epoch, mini-batch + full-graph
+  nnmf          Figure 2 — non-negative matrix factorization per-epoch
+  kge           Figure 3 — TransE/TransR 100-iteration time
+  rjp_ablation  §4 — RJP optimizations on/off
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+"""
+
+import sys
+
+from .common import emit_header
+
+
+def main() -> None:
+    from . import gcn, kge, logreg, nnmf, rjp_ablation
+
+    suites = {
+        "logreg": logreg.run,
+        "gcn": gcn.run,
+        "nnmf": nnmf.run,
+        "kge": kge.run,
+        "rjp_ablation": rjp_ablation.run,
+    }
+    names = sys.argv[1:] or list(suites)
+    unknown = [n for n in names if n not in suites]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}; have {list(suites)}")
+    emit_header()
+    for n in names:
+        print(f"# --- {n} ---")
+        suites[n]()
+
+
+if __name__ == "__main__":
+    main()

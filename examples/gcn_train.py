@@ -1,0 +1,101 @@
+"""End-to-end GCN node-classification training (paper §6, Tables 2–3).
+
+A two-layer graph convolutional network where message passing is the
+paper's three-way join (Node ⋈ Edge ⋈ Node) + Σ-by-destination, executed
+through the relational ops whose backward passes are RA-autodiff-generated
+gradient queries (reversed-edge convolution for ∂h, per-edge dot for ∂w).
+
+Supports full-graph training (the mode only RA-GCN could reach in the
+paper) and mini-batch training, mirroring the paper's two rows.
+
+Run:  PYTHONPATH=src python examples/gcn_train.py [--nodes 2048] [--edges 16384]
+      [--epochs 30] [--mode full|minibatch]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic_graph
+from repro.optim import adam_init, adam_update
+from repro.relational import gcn_conv, rel_linear
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=2048)
+    ap.add_argument("--edges", type=int, default=16384)
+    ap.add_argument("--feat", type=int, default=64)
+    ap.add_argument("--labels", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=256)   # paper: D=256
+    ap.add_argument("--epochs", type=int, default=60)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--mode", choices=("full", "minibatch"), default="full")
+    ap.add_argument("--batch", type=int, default=1024)   # paper: B=1024
+    args = ap.parse_args()
+
+    g = synthetic_graph(args.nodes, args.edges, args.feat, args.labels, seed=0)
+    keys, w, x = g["edge_keys"], g["edge_w"], g["x"]
+    # learnable labels (2-hop-smoothed linear function of the features)
+    rng = np.random.default_rng(0)
+    proj = rng.normal(size=(args.feat, args.labels)).astype(np.float32)
+    smooth = np.asarray(gcn_conv(gcn_conv(x, keys, w), keys, w))
+    y = jnp.asarray(np.argmax(smooth @ proj, axis=1).astype(np.int32))
+
+    params = {
+        "w1": jnp.asarray(
+            rng.normal(size=(args.feat, args.hidden)).astype(np.float32)
+        ) * (args.feat ** -0.5),
+        "w2": jnp.asarray(
+            rng.normal(size=(args.hidden, args.labels)).astype(np.float32)
+        ) * (args.hidden ** -0.5),
+    }
+    opt = adam_init(params)
+
+    def forward(params):
+        h = gcn_conv(x, keys, w)                  # join-agg message passing
+        h = jax.nn.relu(rel_linear(h, params["w1"]))
+        h = gcn_conv(h, keys, w)
+        return rel_linear(h, params["w2"])
+
+    def loss_fn(params, node_ids):
+        logits = forward(params)[node_ids]
+        yy = y[node_ids]
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, yy[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == yy).astype(jnp.float32))
+        return loss, acc
+
+    @jax.jit
+    def step(params, opt, node_ids):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, node_ids
+        )
+        params, opt = adam_update(params, grads, opt, lr=args.lr)
+        return params, opt, loss, acc
+
+    all_nodes = jnp.arange(args.nodes)
+    print(f"mode={args.mode}  |V|={args.nodes} |E|={keys.shape[0]} "
+          f"feat={args.feat} hidden={args.hidden}")
+    for epoch in range(args.epochs):
+        t0 = time.time()
+        if args.mode == "full":
+            params, opt, loss, acc = step(params, opt, all_nodes)
+        else:
+            perm = np.random.default_rng(epoch).permutation(args.nodes)
+            for i in range(0, args.nodes, args.batch):
+                ids = jnp.asarray(perm[i : i + args.batch])
+                params, opt, loss, acc = step(params, opt, ids)
+        dt = time.time() - t0
+        if epoch % 5 == 0 or epoch == args.epochs - 1:
+            print(f"epoch {epoch:3d}  loss {float(loss):.4f}  "
+                  f"acc {float(acc):.3f}  {dt*1e3:.0f} ms")
+    assert float(acc) > 0.5, "training failed to learn"
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end LM training driver: train a ~100M-parameter OLMoE-family
+model (the paper-technique-heavy MoE arch) for a few hundred steps on the
+synthetic pipeline, with checkpointing. Every parameter-bearing matmul's
+backward is an RA-autodiff-generated gradient query (via the relational
+custom_vjp ops inside the model).
+
+Presets:
+  --preset smoke  2-layer d=256 model, 20 steps        (seconds, CI)
+  --preset 100m   8-layer d=512 16-expert MoE ≈ 100M   (the real driver)
+
+Run:  PYTHONPATH=src python examples/lm_train.py --preset smoke
+      PYTHONPATH=src python examples/lm_train.py --preset 100m --steps 300
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data import synthetic_lm_batches
+from repro.models import build_model
+from repro.train import make_train_step
+from repro.train.trainer import init_train_state
+
+
+def make_cfg(preset: str):
+    base = get_config("olmoe-1b-7b")
+    if preset == "smoke":
+        return base.reduced()
+    # ~100M active-param MoE in the olmoe family
+    return base.reduced(
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=1024,
+        vocab=8192,
+        n_experts=16,
+        top_k=4,
+        head_dim=64,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("smoke", "100m"), default="smoke")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    steps = args.steps or (20 if args.preset == "smoke" else 300)
+
+    cfg = make_cfg(args.preset)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.params))
+    print(f"preset={args.preset}  params={n_params/1e6:.1f}M  "
+          f"layers={cfg.n_layers} d={cfg.d_model} experts={cfg.n_experts}")
+
+    step_fn = jax.jit(make_train_step(model, lr=args.lr))
+    batches = synthetic_lm_batches(cfg, args.batch, args.seq, seed=0)
+    params, opt_state = state.params, state.opt_state
+
+    t_start = time.time()
+    first_loss = None
+    for i in range(steps):
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, next(batches))
+        loss = float(metrics["loss"])
+        if first_loss is None:
+            first_loss = loss
+        if i % 10 == 0 or i == steps - 1:
+            tok_s = args.batch * args.seq / (time.time() - t0)
+            print(f"step {i:4d}  loss {loss:.4f}  aux {float(metrics['aux']):.4f}"
+                  f"  {tok_s:,.0f} tok/s")
+        if args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            path = save_checkpoint(args.ckpt_dir, i + 1, params, opt_state)
+            print(f"  checkpoint → {path}")
+    wall = time.time() - t_start
+    print(f"\n{steps} steps in {wall:.0f}s "
+          f"({steps * args.batch * args.seq / wall:,.0f} tok/s avg)")
+    assert np.isfinite(loss) and loss < first_loss, "loss did not improve"
+    print(f"loss {first_loss:.3f} → {loss:.3f}  ok.")
+
+
+if __name__ == "__main__":
+    main()

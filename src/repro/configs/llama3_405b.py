@@ -1,0 +1,19 @@
+"""llama3-405b [dense] — GQA kv=8, 128k vocab, 126 layers
+[arXiv:2407.21783]. Optimizer state in bf16 so params+state fit the
+single-pod 256×16GB HBM budget (documented in DESIGN.md §hardware)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    arch_type="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab=128256,
+    pattern=("attn",),
+    rope_theta=500_000.0,
+    opt_state_dtype="bfloat16",
+)

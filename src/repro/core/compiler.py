@@ -1,0 +1,582 @@
+"""Chunked compiler: lowers FRA query graphs to jit-able JAX computations.
+
+This is the fast path of the engine. Where the sparse interpreter executes
+tuple-at-a-time (the oracle), this executor lowers whole operators to XLA
+ops over chunked relations:
+
+  Σ(grp, +, ⋈(eq-pred, proj, mul/matmul, ·, ·)) over DenseRelations
+      → one ``jnp.einsum`` (block axes from the join's key-equivalence
+        classes, chunk axes from the kernel's chunk_spec);
+  joins against a CooRelation (graph edges)   → gather (``take``);
+  Σ over a CooRelation                        → ``segment_sum`` (scatter-add);
+  RJP broadcast/aligned joins (from Σ/σ differentiation)
+      → transpose + broadcast + elementwise kernel;
+  σ                                           → slice/transpose/elementwise.
+
+Everything here traces under ``jax.jit``; the paper's "database query
+optimizer distributes the computation" role is then played by the sharding
+planner (planner.py) + the XLA SPMD partitioner.
+
+Dense gradients of *absent* tuples: a relational gradient relation simply
+lacks tuples that received no contribution; a dense array cannot express
+absence, so the compiled gradient stores explicit zeros there. Under the
+additive aggregation semantics this is exact.
+"""
+
+from __future__ import annotations
+
+import string
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import fra
+from .kernels import BinKernel
+from .keys import In, JoinPred, JoinProj, KeyFn, L, Lit, R, join_equiv_classes
+from .relation import CooRelation, DenseRelation
+
+AnyRel = Union[DenseRelation, CooRelation]
+Env = Dict[str, AnyRel]
+
+_BLOCK_LETTERS = string.ascii_uppercase
+
+
+def _vmapped(fn, times: int):
+    """Kernel functions have chunk-local semantics (they see one tuple's
+    value). Lift them over leading block-key / nnz axes with vmap so
+    shape-dependent kernels (e.g. sum_chunk, per-chunk softmax) stay
+    correct; XLA fuses the trivial elementwise cases back to one op."""
+    for _ in range(times):
+        fn = jax.vmap(fn)
+    return fn
+
+
+class LoweringError(NotImplementedError):
+    pass
+
+
+def _norm_pairs(pred: JoinPred):
+    """Normalize eq pairs into (L, R), (L, Lit), (R, Lit) canonical forms."""
+    lr, llit, rlit = [], [], []
+    for a, b in pred.eqs:
+        pair = (a, b)
+        if isinstance(b, L) or (isinstance(b, R) and isinstance(a, Lit)):
+            pair = (b, a)
+        a, b = pair
+        if isinstance(a, L) and isinstance(b, R):
+            lr.append((a.idx, b.idx))
+        elif isinstance(a, R) and isinstance(b, L):
+            lr.append((b.idx, a.idx))
+        elif isinstance(a, L) and isinstance(b, Lit):
+            llit.append((a.idx, b.val))
+        elif isinstance(a, R) and isinstance(b, Lit):
+            rlit.append((a.idx, b.val))
+        elif isinstance(a, L) and isinstance(b, L):
+            raise LoweringError(f"L-L equality {a}=={b} not lowerable")
+        elif isinstance(a, R) and isinstance(b, R):
+            raise LoweringError(f"R-R equality {a}=={b} not lowerable")
+        else:
+            raise LoweringError(f"cannot normalize predicate pair {a}=={b}")
+    return lr, llit, rlit
+
+
+# ---------------------------------------------------------------------------
+# Join lowering: einsum path (dense ⋈ dense, multiplicative kernel)
+# ---------------------------------------------------------------------------
+
+
+def _einsum_join(
+    join: fra.Join,
+    grp: Optional[KeyFn],
+    lrel: DenseRelation,
+    rrel: DenseRelation,
+) -> DenseRelation:
+    la, ra = join.left.key_arity, join.right.key_arity
+    uf = join_equiv_classes(join.pred, la, ra)
+    for a, b in join.pred.eqs:
+        if isinstance(a, Lit) or isinstance(b, Lit):
+            raise LoweringError("literal in einsum-join predicate")
+
+    letters: Dict[object, str] = {}
+
+    def letter(comp) -> str:
+        root = uf.find(comp)
+        if root not in letters:
+            letters[root] = _BLOCK_LETTERS[len(letters)]
+        return letters[root]
+
+    lspec = "".join(letter(L(i)) for i in range(la))
+    rspec = "".join(letter(R(j)) for j in range(ra))
+
+    out_comps: List = list(join.proj.comps)
+    if grp is not None:
+        composed = []
+        for c in grp.comps:
+            if isinstance(c, Lit):
+                raise LoweringError("Lit in grp over einsum join")
+            composed.append(join.proj.comps[c.idx])
+        out_comps = composed
+    if any(isinstance(c, Lit) for c in out_comps):
+        raise LoweringError("Lit in einsum join projection")
+    ospec = "".join(letter(c) for c in out_comps)
+
+    if grp is None:
+        # A bare join must not implicitly aggregate: every block class must
+        # survive into the output key.
+        if not set(lspec + rspec) <= set(ospec):
+            raise LoweringError(
+                "bare join drops a key class (duplicate keys); wrap in Σ"
+            )
+
+    k = join.kernel
+    if k.chunk_spec is not None:
+        lc, rc, oc = k.chunk_spec
+        if len(lc) != lrel.chunk_rank or len(rc) != rrel.chunk_rank:
+            raise LoweringError(
+                f"chunk rank mismatch for {k.name}: {lrel.chunk_rank},{rrel.chunk_rank}"
+            )
+    elif k.elementwise:
+        cr = max(lrel.chunk_rank, rrel.chunk_rank)
+        oc = string.ascii_lowercase[:cr]
+        lc = oc[cr - lrel.chunk_rank:]
+        rc = oc[cr - rrel.chunk_rank:]
+    else:
+        raise LoweringError(f"kernel {k.name} is not einsum-lowerable")
+
+    spec = f"{lspec}{lc},{rspec}{rc}->{ospec}{oc}"
+    data = jnp.einsum(spec, lrel.data, rrel.data)
+    return DenseRelation(data, key_arity=len(out_comps))
+
+
+# ---------------------------------------------------------------------------
+# Join lowering: aligned/broadcast path (RJPs of σ and Σ, pointwise losses)
+# ---------------------------------------------------------------------------
+
+
+def _aligned_join(
+    join: fra.Join, lrel: DenseRelation, rrel: DenseRelation
+) -> Optional[DenseRelation]:
+    """Joins whose projection is the identity on one side: the other side is
+    permuted/broadcast into that side's grid and the kernel applied
+    pointwise. Covers the RJP-of-Σ broadcast join, the RJP-of-σ join, and
+    pointwise losses (⊗ against labels with proj → keyL)."""
+    la, ra = join.left.key_arity, join.right.key_arity
+    lr, llit, rlit = _norm_pairs(join.pred)
+
+    id_over_R = join.proj.comps == tuple(R(j) for j in range(ra))
+    id_over_L = join.proj.comps == tuple(L(i) for i in range(la))
+    if id_over_R:
+        base_rel, base_arity = rrel, ra
+        mapped_rel, mapped_arity = lrel, la
+        pairs = [(i, j) for i, j in lr]          # mapped comp i ↔ base comp j
+        mapped_lit, base_lit = llit, rlit
+        order = "lr"
+    elif id_over_L:
+        base_rel, base_arity = lrel, la
+        mapped_rel, mapped_arity = rrel, ra
+        pairs = [(j, i) for i, j in lr]
+        mapped_lit, base_lit = rlit, llit
+        order = "rl"
+    else:
+        return None
+
+    m2b = dict(pairs)
+    if len(m2b) != len(pairs) or len(set(m2b.values())) != len(m2b):
+        return None
+    if len(m2b) != mapped_arity or mapped_lit:
+        return None  # a mapped axis is unconstrained -> would need summation
+
+    # Permute mapped block axes into base-axis order, insert broadcast axes.
+    src = mapped_rel.data
+    perm = sorted(range(mapped_arity), key=lambda i: m2b[i])
+    src = jnp.transpose(
+        src, tuple(perm) + tuple(range(mapped_arity, src.ndim))
+    )
+    matched_base = set(m2b.values())
+    for j in range(base_arity):
+        if j not in matched_base:
+            src = jnp.expand_dims(src, axis=j)
+    # src now has base_arity block axes (some size-1) + mapped chunk dims;
+    # broadcast explicitly so pointwise kernels that ignore one operand
+    # (e.g. the Σ-RJP's take_l) still produce full-grid outputs.
+    src = jnp.broadcast_to(
+        src, base_rel.extents + tuple(src.shape[base_arity:])
+    )
+
+    bb = base_rel.data
+    kfn = _vmapped(join.kernel.fn, base_arity)
+    if order == "lr":
+        val = kfn(src, bb)
+    else:
+        val = kfn(bb, src)
+
+    out_arity = base_arity
+    if base_lit:
+        idx = jnp.ones(base_rel.extents, dtype=bool)
+        for j, v in base_lit:
+            ax_shape = [1] * base_arity
+            ax_shape[j] = base_rel.extents[j]
+            m = (jnp.arange(base_rel.extents[j]) == v).reshape(ax_shape)
+            idx = idx & m
+        mask = idx.reshape(idx.shape + (1,) * (val.ndim - out_arity))
+        val = jnp.where(mask, val, jnp.zeros((), dtype=val.dtype))
+    return DenseRelation(val, key_arity=out_arity)
+
+
+# ---------------------------------------------------------------------------
+# Join lowering: gather path (one side COO)
+# ---------------------------------------------------------------------------
+
+
+def _coo_join(
+    join: fra.Join, lrel: AnyRel, rrel: AnyRel
+) -> CooRelation:
+    coo_is_left = isinstance(lrel, CooRelation)
+    coo = lrel if coo_is_left else rrel
+    dense = rrel if coo_is_left else lrel
+    assert isinstance(dense, DenseRelation)
+    lr, llit, rlit = _norm_pairs(join.pred)
+    if llit or rlit:
+        raise LoweringError("literal predicates on COO joins not supported")
+    # (coo column ↔ dense comp) pairs
+    if coo_is_left:
+        pairs = [(i, j) for i, j in lr]
+    else:
+        pairs = [(j, i) for i, j in lr]
+    d2c = {j: i for i, j in pairs}
+    if len(d2c) != dense.key_arity:
+        raise LoweringError(
+            "COO join requires every dense key component matched (gather)"
+        )
+    idx = tuple(coo.keys[:, d2c[j]] for j in range(dense.key_arity))
+    gathered = dense.data[idx]  # (nnz, *chunk_dense)
+    kfn = _vmapped(join.kernel.fn, 1)
+    if coo_is_left:
+        vals = kfn(coo.values, gathered)
+    else:
+        vals = kfn(gathered, coo.values)
+
+    cols = []
+    extents = []
+    for c in join.proj.comps:
+        if isinstance(c, Lit):
+            cols.append(jnp.full((coo.nnz,), c.val, dtype=coo.keys.dtype))
+            extents.append(c.val + 1)
+            continue
+        if coo_is_left:
+            col = c.idx if isinstance(c, L) else d2c[c.idx]
+            ext = coo.extents[c.idx] if isinstance(c, L) else dense.extents[c.idx]
+        else:
+            col = c.idx if isinstance(c, R) else d2c[c.idx]
+            ext = coo.extents[c.idx] if isinstance(c, R) else dense.extents[c.idx]
+        cols.append(coo.keys[:, col])
+        extents.append(ext)
+    keys = jnp.stack(cols, axis=1) if cols else jnp.zeros((coo.nnz, 0), coo.keys.dtype)
+    return CooRelation(keys, vals, tuple(extents))
+
+
+# ---------------------------------------------------------------------------
+# Restrict lowering: fused per-tuple gather for sparse gradients
+# ---------------------------------------------------------------------------
+
+
+def _solve_side_from_output(
+    pred: JoinPred, proj: JoinProj, la: int, ra: int
+):
+    """For Restrict(Join(...), coo): reconstruct each input key component of
+    the join from the *output* key columns (+ pred equalities). Returns
+    (left_exprs, right_exprs) where each expr is an output column index or
+    a Lit, or None if some component is underdetermined."""
+    uf = join_equiv_classes(pred, la, ra)
+    col_of: Dict[object, object] = {}
+    for p, c in enumerate(proj.comps):
+        if isinstance(c, Lit):
+            continue
+        col_of.setdefault(uf.find(c), p)
+    for a, b in pred.eqs:
+        for c in (a, b):
+            if isinstance(c, Lit):
+                col_of.setdefault(uf.find(c), Lit(c.val))
+
+    def solve(comps):
+        out = []
+        for c in comps:
+            e = col_of.get(uf.find(c))
+            if e is None:
+                return None
+            out.append(e)
+        return out
+
+    lex = solve([L(i) for i in range(la)])
+    rex = solve([R(j) for j in range(ra)])
+    if lex is None or rex is None:
+        return None
+    return lex, rex
+
+
+def _restricted_join(
+    join: fra.Join, ref: CooRelation, lrel: AnyRel, rrel: AnyRel
+) -> CooRelation:
+    """Evaluate a dense⋈dense join only at the key set of ``ref``: gather
+    both operands per ref-tuple and apply the kernel pointwise. This is the
+    sparse-gradient fast path (e.g. ∂loss/∂edge_weights = g[dst]·h[src])."""
+    if not (isinstance(lrel, DenseRelation) and isinstance(rrel, DenseRelation)):
+        raise LoweringError("restricted join requires dense operands")
+    la, ra = join.left.key_arity, join.right.key_arity
+    solved = _solve_side_from_output(join.pred, join.proj, la, ra)
+    if solved is None:
+        raise LoweringError("restricted join underdetermined (needs Σ)")
+    lex, rex = solved
+
+    def gather(rel: DenseRelation, exprs):
+        idx = []
+        for e in exprs:
+            if isinstance(e, Lit):
+                idx.append(jnp.full((ref.nnz,), e.val, dtype=ref.keys.dtype))
+            else:
+                idx.append(ref.keys[:, e])
+        return rel.data[tuple(idx)] if idx else jnp.broadcast_to(
+            rel.data, (ref.nnz,) + rel.chunk_shape
+        )
+
+    lv = gather(lrel, lex)
+    rv = gather(rrel, rex)
+    vals = _vmapped(join.kernel.fn, 1)(lv, rv)
+    # Chunk-level broadcasting in the forward kernel (e.g. scalar edge
+    # weight × embedding chunk) dualizes to a reduction in the backward:
+    # sum the VJP chunk down to the target relation's chunk shape.
+    tgt = ref.chunk_shape
+    extra = (vals.ndim - 1) - len(tgt)
+    if extra > 0:
+        vals = jnp.sum(vals, axis=tuple(range(1, 1 + extra)))
+    for ax, (got, want) in enumerate(zip(vals.shape[1:], tgt)):
+        if got != want:
+            assert want == 1, (vals.shape, tgt)
+            vals = jnp.sum(vals, axis=1 + ax, keepdims=True)
+    return CooRelation(ref.keys, vals, ref.extents)
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+
+def execute(
+    root: fra.Node,
+    env: Env,
+    cache: Optional[Env] = None,
+    *,
+    fuse_join_agg: bool = True,
+) -> AnyRel:
+    """Execute a query graph over chunked relations.
+
+    ``fuse_join_agg=False`` materializes every Join's output individually
+    instead of fusing Σ∘⋈ into one einsum — needed when a gradient program
+    built *without* the §4 join-agg-fusion optimization will consume the
+    join intermediates (benchmarks/rjp_ablation.py)."""
+    memo: Dict[int, AnyRel] = {}
+
+    def ex(n: fra.Node) -> AnyRel:
+        if n.id in memo:
+            return memo[n.id]
+        out = _ex(n)
+        memo[n.id] = out
+        if cache is not None:
+            cache[f"__fwd_{n.id}"] = out
+        return out
+
+    def _join(n: fra.Join, grp: Optional[KeyFn]) -> AnyRel:
+        lrel, rrel = ex(n.left), ex(n.right)
+        if isinstance(lrel, CooRelation) or isinstance(rrel, CooRelation):
+            if isinstance(lrel, CooRelation) and isinstance(rrel, CooRelation):
+                raise LoweringError("COO ⋈ COO not supported")
+            out = _coo_join(n, lrel, rrel)
+            if grp is not None:
+                out = _agg_coo(grp, out)
+            return out
+        # dense ⋈ dense
+        k = n.kernel
+        if k.elementwise or k.chunk_spec is not None:
+            try:
+                return _einsum_join(n, grp, lrel, rrel)
+            except LoweringError:
+                pass
+        al = _aligned_join(n, lrel, rrel)
+        if al is not None:
+            if grp is not None:
+                al = _agg_dense(grp, al)
+            return al
+        raise LoweringError(f"cannot lower join {n.describe()}")
+
+    def _agg_dense(grp: KeyFn, rel: DenseRelation) -> DenseRelation:
+        arity = rel.key_arity
+        if all(isinstance(c, Lit) for c in grp.comps) and grp.arity_out == 0:
+            data = jnp.sum(
+                rel.data, axis=tuple(range(arity))
+            ) if arity else rel.data
+            return DenseRelation(data, key_arity=0)
+        if any(isinstance(c, Lit) for c in grp.comps):
+            raise LoweringError("mixed Lit grp over dense not supported")
+        keep = [c.idx for c in grp.comps]
+        if len(set(keep)) != len(keep):
+            raise LoweringError("duplicate grp components over dense")
+        drop = tuple(i for i in range(arity) if i not in keep)
+        data = jnp.sum(rel.data, axis=drop) if drop else rel.data
+        # axes now ordered by ascending original idx; permute to grp order
+        remaining = [i for i in range(arity) if i not in drop]
+        perm = [remaining.index(i) for i in keep]
+        data = jnp.transpose(
+            data, tuple(perm) + tuple(range(len(keep), data.ndim))
+        )
+        return DenseRelation(data, key_arity=len(keep))
+
+    def _agg_coo(grp: KeyFn, rel: CooRelation) -> DenseRelation:
+        if any(isinstance(c, Lit) for c in grp.comps):
+            raise LoweringError("Lit grp over COO not supported")
+        keep = [c.idx for c in grp.comps]
+        extents = tuple(rel.extents[i] for i in keep)
+        if not extents:
+            return DenseRelation(jnp.sum(rel.values, axis=0), key_arity=0)
+        flat = jnp.zeros((rel.nnz,), dtype=jnp.int32)
+        stride = 1
+        for i in reversed(range(len(keep))):
+            flat = flat + rel.keys[:, keep[i]].astype(jnp.int32) * stride
+            stride *= extents[i]
+        num = 1
+        for e in extents:
+            num *= e
+        summed = jax.ops.segment_sum(rel.values, flat, num_segments=num)
+        return DenseRelation(
+            summed.reshape(extents + rel.chunk_shape), key_arity=len(extents)
+        )
+
+    def _ex(n: fra.Node) -> AnyRel:
+        if isinstance(n, fra.TableScan):
+            return env[n.name]
+        if isinstance(n, fra.Const):
+            return env[n.ref]
+        if isinstance(n, fra.Select):
+            rel = ex(n.child)
+            if isinstance(rel, CooRelation):
+                if not n.pred.always_true:
+                    raise LoweringError("predicated σ over COO not supported")
+                cols = []
+                extents = []
+                for c in n.proj.comps:
+                    if isinstance(c, Lit):
+                        raise LoweringError("Lit proj over COO")
+                    cols.append(rel.keys[:, c.idx])
+                    extents.append(rel.extents[c.idx])
+                keys = jnp.stack(cols, axis=1)
+                vals = _vmapped(n.kernel.fn, 1)(rel.values)
+                return CooRelation(keys, vals, tuple(extents))
+            if n.pred.custom is not None:
+                raise LoweringError("custom σ predicate not compilable")
+            fixed = dict(n.pred.eqs)
+            data = rel.data
+            # slice fixed components (descending so axes stay valid)
+            for i in sorted(fixed, reverse=True):
+                data = jnp.take(data, fixed[i], axis=i)
+            remaining = [i for i in range(n.child.key_arity) if i not in fixed]
+            proj_idx = []
+            for c in n.proj.comps:
+                if isinstance(c, Lit):
+                    raise LoweringError("Lit σ projection over dense")
+                if c.idx in fixed:
+                    raise LoweringError("σ projects a predicate-fixed component")
+                proj_idx.append(remaining.index(c.idx))
+            if sorted(proj_idx) != list(range(len(remaining))):
+                raise LoweringError("σ projection must permute surviving comps")
+            chunk_axes = tuple(range(len(remaining), data.ndim))
+            data = jnp.transpose(data, tuple(proj_idx) + chunk_axes)
+            data = _vmapped(n.kernel.fn, len(proj_idx))(data)
+            return DenseRelation(data, key_arity=len(proj_idx))
+        if isinstance(n, fra.Agg):
+            if isinstance(n.child, fra.Join) and fuse_join_agg:
+                if not n.kernel.is_add:
+                    raise LoweringError("non-additive Σ over ⋈ not supported")
+                return _join(n.child, n.grp)
+            rel = ex(n.child)
+            if not n.kernel.is_add:
+                raise LoweringError("non-additive Σ not supported in compiler")
+            if isinstance(rel, CooRelation):
+                return _agg_coo(n.grp, rel)
+            return _agg_dense(n.grp, rel)
+        if isinstance(n, fra.Join):
+            return _join(n, None)
+        if isinstance(n, fra.Restrict):
+            ref = ex(n.ref)
+            if isinstance(ref, DenseRelation):
+                # Full-grid key set: the restriction is the identity.
+                return ex(n.child)
+            assert isinstance(ref, CooRelation)
+            if isinstance(n.child, fra.Join):
+                lrel, rrel = ex(n.child.left), ex(n.child.right)
+                if isinstance(lrel, DenseRelation) and isinstance(rrel, DenseRelation):
+                    return _restricted_join(n.child, ref, lrel, rrel)
+            child = ex(n.child)
+            if isinstance(child, CooRelation):
+                # By construction RJP outputs over a sparse target reuse the
+                # target's key order.
+                return child
+            # Dense child: gather at ref keys.
+            idx = tuple(ref.keys[:, i] for i in range(ref.key_arity))
+            return CooRelation(ref.keys, child.data[idx], ref.extents)
+        if isinstance(n, fra.AddOp):
+            a, b = ex(n.left), ex(n.right)
+            if isinstance(a, DenseRelation) and isinstance(b, DenseRelation):
+                return DenseRelation(a.data + b.data, a.key_arity)
+            if isinstance(a, DenseRelation) and isinstance(b, CooRelation):
+                a, b = b, a
+            if isinstance(a, CooRelation) and isinstance(b, DenseRelation):
+                idx = tuple(a.keys[:, i] for i in range(a.key_arity))
+                return DenseRelation(b.data.at[idx].add(a.values), b.key_arity)
+            raise LoweringError("COO + COO add not supported")
+        raise TypeError(f"unknown node {n}")
+
+    return ex(root)
+
+
+def run_query(q: fra.Query, env: Env) -> AnyRel:
+    return execute(q.root, env)
+
+
+def execute_with_cache(
+    root: fra.Node, env: Env, *, fuse_join_agg: bool = True
+) -> Tuple[AnyRel, Env]:
+    """Forward pass caching every evaluated node's chunked relation, for the
+    compiled gradient path (Algorithm 2 line 6). Joins consumed by a fusing
+    Agg are evaluated as part of the fused einsum and are not individually
+    cached — the §4-optimized RJPs never consume them, only their children
+    (which are cached). Pass ``fuse_join_agg=False`` when the gradient
+    program was built without join-agg fusion and needs the join
+    intermediates."""
+    fwd: Env = {}
+    out = execute(root, env, cache=fwd, fuse_join_agg=fuse_join_agg)
+    return out, fwd
+
+
+def grad_eval(
+    prog,
+    env: Env,
+    seed: Optional[AnyRel] = None,
+    *,
+    fuse_join_agg: bool = True,
+) -> Tuple[AnyRel, Dict[str, AnyRel]]:
+    """Execute a GradientProgram (autodiff.py) entirely on the compiled
+    path: chunked forward with cache, then each gradient query graph."""
+    from .relation import scalar_relation
+
+    out, fwd = execute_with_cache(
+        prog.forward.root, env, fuse_join_agg=fuse_join_agg
+    )
+    if seed is None:
+        if not (isinstance(out, DenseRelation) and out.key_arity == 0):
+            raise ValueError("default seed requires a scalar-loss output")
+        seed = DenseRelation(jnp.ones_like(out.data), key_arity=0)
+    genv = dict(env)
+    genv.update(fwd)
+    genv["__seed"] = seed
+    grads = {name: execute(rootn, genv) for name, rootn in prog.grads.items()}
+    return out, grads

@@ -1,0 +1,223 @@
+"""Kernel functions for the functional RA, with derivative registry.
+
+The paper parameterizes RA operations with scalar kernel functions and, in
+the chunked "tensor-relational" extension (Appendix A), with tensor kernels
+(MatMul/MatAdd/...). RJP construction needs, for every kernel, its
+derivative in VJP form:
+
+  unary   ⊙ : V -> V          vjp(g, x)        =  (∂⊙(x)/∂x)ᵀ · g
+  binary  ⊗ : V x V -> V      vjp_l(g, l, r)   =  (∂⊗/∂l)ᵀ · g
+                              vjp_r(g, l, r)   =  (∂⊗/∂r)ᵀ · g
+  agg     ⊕ : V x V -> V      commutative+associative; for ⊕ = add the
+                              derivative is the identity map on g.
+
+Kernels are looked up by name so query graphs stay picklable/hashable and
+the compiler can pattern-match (e.g. ⊗ ∈ {mul, matmul} + ⊕ = add → einsum).
+Per Appendix A, derivatives of *chunk* kernels may be produced by
+conventional auto-diff (JAX) — that is where ``jax.grad``/``jax.vjp`` is
+allowed; the relational layer above never calls it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class UnaryKernel:
+    name: str
+    fn: Callable
+    vjp: Callable  # vjp(g, x)
+
+    def __repr__(self) -> str:
+        return f"⊙{self.name}"
+
+
+@dataclass(frozen=True)
+class BinKernel:
+    name: str
+    fn: Callable
+    vjp_l: Callable  # vjp_l(g, l, r)
+    vjp_r: Callable  # vjp_r(g, l, r)
+    # "multiplicative" kernels admit the paper's §4 ⋈_const-elimination:
+    # ∂⊗/∂l depends only on (g, r) and ∂⊗/∂r only on (g, l).
+    multiplicative: bool = False
+    # einsum lowering hints for the chunked compiler:
+    #   elementwise  — ⊗ multiplies chunks pointwise (broadcasting)
+    #   chunk_spec   — (l, r, out) einsum letters over *chunk* dims
+    #                  (e.g. matmul: ('mk', 'kn', 'mn')); lowercase reserved
+    #                  for chunks, uppercase for block-key axes.
+    elementwise: bool = False
+    chunk_spec: Optional[tuple] = None
+
+    def __repr__(self) -> str:
+        return f"⊗{self.name}"
+
+
+@dataclass(frozen=True)
+class AggKernel:
+    name: str
+    fn: Callable  # fn(a, b), commutative + associative
+    # unit for reductions over an empty/masked set, as a float
+    unit: float = 0.0
+    # is ⊕ == +? (enables the paper's constant-grp RJP simplification and
+    # einsum lowering)
+    is_add: bool = True
+
+    def __repr__(self) -> str:
+        return f"⊕{self.name}"
+
+
+_UNARY: Dict[str, UnaryKernel] = {}
+_BIN: Dict[str, BinKernel] = {}
+_AGG: Dict[str, AggKernel] = {}
+
+
+def register_unary(name: str, fn: Callable, vjp: Optional[Callable] = None) -> UnaryKernel:
+    if vjp is None:
+        # Appendix A: chunk-kernel derivatives via conventional auto-diff.
+        def vjp(g, x, _fn=fn):
+            _, pull = jax.vjp(_fn, x)
+            return pull(g)[0]
+
+    k = UnaryKernel(name, fn, vjp)
+    _UNARY[name] = k
+    return k
+
+
+def register_bin(
+    name: str,
+    fn: Callable,
+    vjp_l: Optional[Callable] = None,
+    vjp_r: Optional[Callable] = None,
+    multiplicative: bool = False,
+    elementwise: bool = False,
+    chunk_spec: Optional[tuple] = None,
+) -> BinKernel:
+    if vjp_l is None:
+        def vjp_l(g, l, r, _fn=fn):
+            _, pull = jax.vjp(_fn, l, r)
+            return pull(g)[0]
+
+    if vjp_r is None:
+        def vjp_r(g, l, r, _fn=fn):
+            _, pull = jax.vjp(_fn, l, r)
+            return pull(g)[1]
+
+    k = BinKernel(name, fn, vjp_l, vjp_r, multiplicative, elementwise, chunk_spec)
+    _BIN[name] = k
+    return k
+
+
+def register_agg(name: str, fn: Callable, unit: float = 0.0, is_add: bool = True) -> AggKernel:
+    k = AggKernel(name, fn, unit, is_add)
+    _AGG[name] = k
+    return k
+
+
+def unary(name: str) -> UnaryKernel:
+    return _UNARY[name]
+
+
+def bin_kernel(name: str) -> BinKernel:
+    return _BIN[name]
+
+
+def agg(name: str) -> AggKernel:
+    return _AGG[name]
+
+
+# ---------------------------------------------------------------------------
+# Standard kernels
+# ---------------------------------------------------------------------------
+
+# -- aggregation ⊕ ----------------------------------------------------------
+ADD = register_agg("add", lambda a, b: a + b)           # scalars and chunks
+MATADD = register_agg("matadd", lambda a, b: a + b)      # alias, paper's name
+MAX = register_agg("max", jnp.maximum, unit=-jnp.inf, is_add=False)
+
+# -- binary ⊗ ---------------------------------------------------------------
+MUL = register_bin(
+    "mul",
+    lambda l, r: l * r,
+    vjp_l=lambda g, l, r: g * r,
+    vjp_r=lambda g, l, r: g * l,
+    multiplicative=True,
+    elementwise=True,
+)
+
+# Blocked matrix multiply over chunks. vjp_l/vjp_r are the paper's Fig. 4
+# optimized RJP kernels: dL = g @ rᵀ, dR = lᵀ @ g.
+MATMUL = register_bin(
+    "matmul",
+    lambda l, r: jnp.matmul(l, r),
+    vjp_l=lambda g, l, r: jnp.matmul(g, jnp.swapaxes(r, -1, -2)),
+    vjp_r=lambda g, l, r: jnp.matmul(jnp.swapaxes(l, -1, -2), g),
+    multiplicative=True,
+    chunk_spec=("mk", "kn", "mn"),
+)
+
+ADD2 = register_bin(
+    "add2",
+    lambda l, r: l + r,
+    vjp_l=lambda g, l, r: g,
+    vjp_r=lambda g, l, r: g,
+)
+
+SUB = register_bin(
+    "sub",
+    lambda l, r: l - r,
+    vjp_l=lambda g, l, r: g,
+    vjp_r=lambda g, l, r: -g,
+)
+
+# cross-entropy ⊗ for logistic regression (paper §2.3):
+#   ⊗(yhat, y) = -y·log(yhat) + (y-1)·log(1-yhat)
+XENT = register_bin(
+    "xent",
+    lambda yhat, y: -y * jnp.log(yhat) + (y - 1.0) * jnp.log1p(-yhat),
+    vjp_l=lambda g, yhat, y: g * (-y / yhat - (y - 1.0) / (1.0 - yhat)),
+    vjp_r=lambda g, yhat, y: g * (-jnp.log(yhat) + jnp.log1p(-yhat)),
+)
+
+# squared error ⊗(pred, target) = 0.5(pred-target)^2, for NNMF / KGE
+SQERR = register_bin(
+    "sqerr",
+    lambda p, t: 0.5 * (p - t) ** 2,
+    vjp_l=lambda g, p, t: g * (p - t),
+    vjp_r=lambda g, p, t: g * (t - p),
+)
+
+# -- unary ⊙ ----------------------------------------------------------------
+IDENT = register_unary("ident", lambda x: x, vjp=lambda g, x: g)
+NEG = register_unary("neg", lambda x: -x, vjp=lambda g, x: -g)
+LOGISTIC = register_unary(
+    "logistic",
+    jax.nn.sigmoid,
+    vjp=lambda g, x: g * jax.nn.sigmoid(x) * (1.0 - jax.nn.sigmoid(x)),
+)
+RELU = register_unary("relu", jax.nn.relu, vjp=lambda g, x: g * (x > 0))
+EXP = register_unary("exp", jnp.exp, vjp=lambda g, x: g * jnp.exp(x))
+SQUARE = register_unary("square", lambda x: x * x, vjp=lambda g, x: 2.0 * g * x)
+# Reduce a chunk to a scalar value (chunked losses). Chunk-local semantics:
+# executors vmap kernels over block-key axes, so jnp.sum sees one chunk.
+SUM_CHUNK = register_unary(
+    "sum_chunk",
+    lambda x: jnp.sum(x),
+    vjp=lambda g, x: g * jnp.ones_like(x),
+)
+SCALE = {}
+
+
+def scale_kernel(c: float) -> UnaryKernel:
+    """⊙(x) = c·x — memoized per constant."""
+    key = float(c)
+    if key not in SCALE:
+        SCALE[key] = register_unary(
+            f"scale[{key}]", lambda x, _c=key: _c * x, vjp=lambda g, x, _c=key: _c * g
+        )
+    return SCALE[key]

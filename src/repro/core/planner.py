@@ -1,0 +1,213 @@
+"""Distribution planner: the JAX analogue of the paper's claim that "the
+database query optimizer will automatically distribute the computation,
+taking into account the sizes of the two matrices" (§1).
+
+For every Join in an FRA query the planner chooses, from relation sizes
+and the mesh, between the paper's two physical plans:
+
+  * BROADCAST the small side (the paper's data-parallel plan): the small
+    relation is replicated (XLA: all-gather once), the big side stays
+    partitioned on a non-contraction block axis; no output collective.
+  * CO-PARTITION both sides on the join key (the paper's mixed
+    data/model-parallel or tensor-parallel plan): both relations are
+    sharded on the contraction block axis; the join-aggregate's Σ then
+    requires an all-reduce (psum) of the output.
+
+The decision is made statically (relation chunk-grid shapes are static at
+trace time) with the same bytes-moved cost model a database optimizer
+uses, and is *executed* by emitting PartitionSpecs for the relations'
+block axes — the XLA SPMD partitioner then plays the role of the
+database execution engine, inserting exactly the all-gather or
+all-reduce the chosen plan implies.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from . import fra
+from .keys import L, R, join_equiv_classes
+from .relation import CooRelation, DenseRelation
+
+
+@dataclass(frozen=True)
+class JoinPlan:
+    """Physical plan for one Join node."""
+
+    kind: str                      # broadcast_left | broadcast_right | copartition
+    node_id: int
+    # estimated bytes moved per device for each candidate (the cost table)
+    costs: Dict[str, float]
+    # block-axis index carrying the mesh axis, per side (None = replicated)
+    left_shard_dim: Optional[int]
+    right_shard_dim: Optional[int]
+    # does the plan end in an all-reduce of the join-agg output?
+    needs_psum: bool
+
+    def pspec(self, side: str, arity: int, axis: str = "model") -> P:
+        dim = self.left_shard_dim if side == "left" else self.right_shard_dim
+        spec = [None] * arity
+        if dim is not None and dim < arity:
+            spec[dim] = axis
+        return P(*spec)
+
+
+def _rel_bytes(rel) -> float:
+    if isinstance(rel, DenseRelation):
+        return float(rel.data.size * rel.data.dtype.itemsize)
+    if isinstance(rel, CooRelation):
+        return float(rel.values.size * rel.values.dtype.itemsize)
+    # ShapeDtypeStruct-like estimate
+    size = 1
+    for d in rel.shape:
+        size *= d
+    return float(size * rel.dtype.itemsize)
+
+
+def _contraction_dims(join: fra.Join) -> Tuple[Optional[int], Optional[int]]:
+    """Joined-on block-key dims (left, right) — the contraction axes a
+    co-partition plan shards. (The join-agg tree's Σ typically drops this
+    key from the final output; whether it survives the join's own proj is
+    irrelevant to the physical plan.)"""
+    al = join.left.key_arity
+    ar = join.right.key_arity
+    uf = join_equiv_classes(join.pred, al, ar)
+    for i in range(al):
+        root = uf.find(L(i))
+        for j in range(ar):
+            if uf.find(R(j)) == root:
+                return i, j
+    return None, None
+
+
+def _output_dims(join: fra.Join) -> Tuple[Optional[int], Optional[int]]:
+    """First *non-contraction* block dim per side that survives into the
+    output (for the broadcast plans: the kept side stays sharded on a dim
+    requiring no collective — sharding the contraction dim would still
+    force a psum)."""
+    lc, rc = _contraction_dims(join)
+    ldim = rdim = None
+    for c in join.proj.comps:
+        if isinstance(c, L) and ldim is None and c.idx != lc:
+            ldim = c.idx
+        if isinstance(c, R) and rdim is None and c.idx != rc:
+            rdim = c.idx
+    return ldim, rdim
+
+
+DEFAULT_MEM_BUDGET = 8e9  # half a v5e chip's 16 GB HBM for one relation
+
+
+def plan_join(
+    join: fra.Join,
+    left_bytes: float,
+    right_bytes: float,
+    out_bytes: float,
+    n_devices: int,
+    mem_budget: float = DEFAULT_MEM_BUDGET,
+) -> JoinPlan:
+    """Pick the cheapest *feasible* physical plan by bytes moved per
+    device, exactly the way the paper describes the database optimizer
+    (§1): broadcast requires the broadcast relation to be replicated on
+    every node, so it is only feasible within the per-node memory budget;
+    otherwise the relations are co-partitioned on the join key.
+
+    all-gather of X over N devices moves ~X·(N-1)/N per device;
+    a ring all-reduce of the output moves ~2·out·(N-1)/N.
+    """
+    frac = (n_devices - 1) / n_devices
+    lc, rc = _contraction_dims(join)
+    lo, ro = _output_dims(join)
+
+    costs: Dict[str, float] = {}
+    if left_bytes <= mem_budget:
+        costs["broadcast_left"] = left_bytes * frac
+    if right_bytes <= mem_budget:
+        costs["broadcast_right"] = right_bytes * frac
+    if lc is not None and rc is not None:
+        # co-partition on the contraction key: inputs land pre-sharded
+        # (no repartition cost for our static plans — parameters/data are
+        # *created* in the planned layout), output needs the psum.
+        costs["copartition"] = 2.0 * out_bytes * frac
+    if not costs:
+        raise ValueError(
+            "no feasible plan: both sides exceed the memory budget and the "
+            "join has no contraction key to co-partition on"
+        )
+    kind = min(costs, key=costs.get)
+
+    if kind == "copartition":
+        return JoinPlan(kind, join.id, costs, lc, rc, needs_psum=True)
+    if kind == "broadcast_left":
+        return JoinPlan(kind, join.id, costs, None, ro, needs_psum=False)
+    return JoinPlan(kind, join.id, costs, lo, None, needs_psum=False)
+
+
+def plan_query(
+    query: fra.Query,
+    env: Dict[str, object],
+    n_devices: int,
+    mem_budget: float = DEFAULT_MEM_BUDGET,
+) -> Dict[int, JoinPlan]:
+    """Walk the query graph, estimate relation sizes bottom-up, and emit a
+    JoinPlan per Join node (keyed by node id)."""
+    sizes: Dict[int, float] = {}
+    plans: Dict[int, JoinPlan] = {}
+
+    for node in query.root.topo():
+        if isinstance(node, (fra.TableScan, fra.Const)):
+            ref = node.name if isinstance(node, fra.TableScan) else node.ref
+            if ref in env:
+                sizes[node.id] = _rel_bytes(env[ref])
+            else:  # unresolved (__seed/__fwd): assume small
+                sizes[node.id] = 0.0
+        elif isinstance(node, fra.Select):
+            sizes[node.id] = sizes[node.child.id]
+        elif isinstance(node, fra.Agg):
+            # grouping reduces size by the dropped-key fraction; without
+            # key-domain statistics assume a 1/8 reduction per dropped key
+            child = sizes[node.child.id]
+            dropped = max(0, node.child.key_arity - node.key_arity)
+            sizes[node.id] = child / (8.0 ** dropped)
+        elif isinstance(node, fra.Join):
+            lb = sizes[node.left.id]
+            rb = sizes[node.right.id]
+            ob = max(lb, rb)  # join-agg output is at most the big side
+            plans[node.id] = plan_join(node, lb, rb, ob, n_devices, mem_budget)
+            sizes[node.id] = ob
+        elif isinstance(node, (fra.AddOp, fra.Restrict)):
+            sizes[node.id] = sizes[node.children[0].id]
+    return plans
+
+
+def input_pspecs(
+    query: fra.Query,
+    plans: Dict[int, JoinPlan],
+    axis: str = "model",
+) -> Dict[str, P]:
+    """PartitionSpecs for the query's base relations implied by the plans.
+
+    When a relation feeds multiple joins with conflicting specs the first
+    (bottom-most) join wins — XLA resharding handles the rest."""
+    specs: Dict[str, P] = {}
+
+    def leaf_name(n) -> Optional[str]:
+        if isinstance(n, fra.TableScan):
+            return n.name
+        if isinstance(n, fra.Const):
+            return n.ref
+        return None
+
+    for node in query.root.topo():
+        if not isinstance(node, fra.Join) or node.id not in plans:
+            continue
+        plan = plans[node.id]
+        for side, child in (("left", node.left), ("right", node.right)):
+            name = leaf_name(child)
+            if name is None or name in specs:
+                continue
+            specs[name] = plan.pspec(side, child.key_arity, axis)
+    return specs

@@ -1,0 +1,122 @@
+"""Chunked relation representations for the compiled path (Appendix A).
+
+Two physical layouts, mirroring what a tensor-relational engine stores:
+
+  DenseRelation — the key set is a full grid range(n₀)×…×range(n_{d-1});
+      tuples are laid out as one jnp array of shape (n₀,…,n_{d-1}, *chunk).
+      This is the layout for blocked matrices/tensors (paper §2.1 Fig 1).
+
+  CooRelation — sparse key set: an int32 key array (nnz, d) plus a value
+      array (nnz, *chunk) and per-column extents. This is the layout for
+      graph edge relations (paper §1 GCN example).
+
+Both carry ``chunk_rank`` — the number of trailing value ("chunk") dims —
+so executors can separate block-key axes from within-chunk axes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class DenseRelation:
+    data: jnp.ndarray
+    key_arity: int
+
+    @property
+    def chunk_rank(self) -> int:
+        return self.data.ndim - self.key_arity
+
+    @property
+    def extents(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape[: self.key_arity])
+
+    @property
+    def chunk_shape(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape[self.key_arity:])
+
+    def to_sparse(self) -> dict:
+        """Materialize as dict for interpreter cross-checks (small inputs)."""
+        out = {}
+        arr = np.asarray(self.data)
+        for key in np.ndindex(*self.extents):
+            v = arr[key]
+            out[tuple(int(i) for i in key)] = v if self.chunk_rank else float(v)
+        return out
+
+
+@dataclass
+class CooRelation:
+    keys: jnp.ndarray    # (nnz, key_arity) int32
+    values: jnp.ndarray  # (nnz, *chunk)
+    extents: Tuple[int, ...]
+
+    @property
+    def key_arity(self) -> int:
+        return int(self.keys.shape[1])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def chunk_rank(self) -> int:
+        return self.values.ndim - 1
+
+    @property
+    def chunk_shape(self) -> Tuple[int, ...]:
+        return tuple(self.values.shape[1:])
+
+    def to_sparse(self) -> dict:
+        out = {}
+        keys = np.asarray(self.keys)
+        vals = np.asarray(self.values)
+        for i in range(keys.shape[0]):
+            k = tuple(int(x) for x in keys[i])
+            v = vals[i]
+            out[k] = v if self.chunk_rank else float(v)
+        return out
+
+
+Relation = (DenseRelation, CooRelation)
+
+
+def from_blocked(x, block_shape: Tuple[int, ...]) -> DenseRelation:
+    """Split a dense array into a chunked DenseRelation (paper Fig 1)."""
+    x = jnp.asarray(x)
+    assert x.ndim == len(block_shape)
+    grid = []
+    for n, b in zip(x.shape, block_shape):
+        assert n % b == 0, (n, b)
+        grid.append(n // b)
+    # (g0,b0,g1,b1,...) -> (g0,g1,...,b0,b1,...)
+    shape = []
+    for g, b in zip(grid, block_shape):
+        shape += [g, b]
+    y = x.reshape(shape)
+    perm = list(range(0, 2 * len(grid), 2)) + list(range(1, 2 * len(grid), 2))
+    return DenseRelation(jnp.transpose(y, perm), key_arity=len(grid))
+
+
+def to_blocked(rel: DenseRelation):
+    """Inverse of from_blocked: reassemble the dense array."""
+    d = rel.key_arity
+    grid = rel.extents
+    block = rel.chunk_shape
+    assert len(block) == d, "to_blocked requires chunk_rank == key_arity"
+    perm = [None] * (2 * d)
+    for i in range(d):
+        perm[2 * i] = i
+        perm[2 * i + 1] = d + i
+    y = jnp.transpose(rel.data, perm)
+    return y.reshape(tuple(g * b for g, b in zip(grid, block)))
+
+
+def scalar_relation(value=1.0, dtype=jnp.float32) -> DenseRelation:
+    """The one-tuple relation {(⟨⟩, value)} — loss outputs / gradient seeds."""
+    return DenseRelation(jnp.asarray(value, dtype=dtype), key_arity=0)

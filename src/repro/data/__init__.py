@@ -1,0 +1,2 @@
+from .pipeline import synthetic_lm_batches, batch_for  # noqa: F401
+from .graphs import synthetic_graph  # noqa: F401

@@ -1,0 +1,39 @@
+"""Synthetic data pipeline: deterministic, shardable token batches plus the
+modality-stub inputs (frame/patch embeddings) for audio/vlm backbones."""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def batch_for(cfg, batch: int, seq: int, rng: np.random.Generator) -> Dict:
+    """One training batch matching ``cfg``'s modality."""
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, seq)), dtype=jnp.int32
+        ),
+    }
+    labels = rng.integers(0, cfg.vocab, size=(batch, seq))
+    out["labels"] = jnp.asarray(labels, dtype=jnp.int32)
+    if cfg.encoder_layers:
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.enc_seq, cfg.d_model)).astype(np.float32),
+            dtype=jnp.dtype(cfg.dtype),
+        )
+    if cfg.vis_seq:
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.vis_seq, cfg.d_model)).astype(np.float32),
+            dtype=jnp.dtype(cfg.dtype),
+        )
+    return out
+
+
+def synthetic_lm_batches(
+    cfg, batch: int, seq: int, seed: int = 0
+) -> Iterator[Dict]:
+    rng = np.random.default_rng(seed)
+    while True:
+        yield batch_for(cfg, batch, seq, rng)

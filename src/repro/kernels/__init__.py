@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+The paper's hot path is the chunked join-aggregate (Σ⋈). On TPU this maps
+to two kernels:
+
+  matmul/   — MXU-tiled blocked matmul with VMEM accumulation: the Σ⋈ with
+              ⊗ = MatMul over DenseRelations (paper Fig. 4 / Appendix A).
+  segsum/   — segment-sum of edge messages: the Σ-by-dst over a CooRelation
+              (GCN message passing). TPU-native adaptation: the scatter-add
+              a GPU engine would use is re-expressed as one-hot × message
+              matmuls so the reduction runs on the MXU instead of relying
+              on random-access memory writes the TPU does not have.
+
+Each kernel package has: <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper with interpret fallback), ref.py (pure-jnp
+oracle used by tests).
+"""

@@ -1,0 +1,52 @@
+"""Public wrapper for the blocked-matmul kernel.
+
+Pads inputs up to tile multiples, dispatches to the Pallas kernel on TPU
+and to interpret mode elsewhere (this container is CPU-only; TPU is the
+deployment target). ``use_pallas=False`` falls back to the jnp oracle —
+that is what the chunked compiler uses under jit on CPU, keeping the
+kernel on the hot path only where it wins.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+from .ref import matmul_ref
+
+
+def _pad_to(x: jnp.ndarray, m: int, axis: int) -> jnp.ndarray:
+    r = x.shape[axis] % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "use_pallas")
+)
+def blocked_matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """x @ y via the MXU-tiled Pallas kernel, padding to tile multiples."""
+    if not use_pallas:
+        return matmul_ref(x, y)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = x.shape[0], y.shape[1]
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y, bk, 0), bn, 1)
+    out = matmul_pallas(xp, yp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or x.dtype
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32)
+    ).astype(out_dtype)

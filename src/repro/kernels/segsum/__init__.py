@@ -1,0 +1,1 @@
+from .ops import segment_sum  # noqa: F401

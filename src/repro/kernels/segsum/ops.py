@@ -1,0 +1,49 @@
+"""Public wrapper for the segment-sum kernel: pads E and the segment count
+to tile multiples (padding edges carry id -1, dropped by the one-hot)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import segment_sum_ref
+from .segsum import segment_sum_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "bs", "be", "bd", "interpret", "use_pallas"),
+)
+def segment_sum(
+    msg: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_segments: int,
+    *,
+    bs: int = 128,
+    be: int = 512,
+    bd: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    if not use_pallas:
+        return segment_sum_ref(msg, seg, num_segments)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    e, d = msg.shape
+    ep = (-e) % be
+    if ep:
+        msg = jnp.pad(msg, ((0, ep), (0, 0)))
+        seg = jnp.pad(seg, (0, ep), constant_values=-1)
+    sp = (-num_segments) % bs
+    out = segment_sum_pallas(
+        msg,
+        seg.astype(jnp.int32),
+        num_segments + sp,
+        bs=bs,
+        be=be,
+        bd=bd,
+        interpret=interpret,
+    )
+    return out[:num_segments]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the segment-sum kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(msg: jnp.ndarray, seg: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    """Out-of-range / negative segment ids (padding) are dropped, matching
+    the kernel's one-hot behaviour."""
+    return jax.ops.segment_sum(msg, seg, num_segments=num_segments)

@@ -1,0 +1,2 @@
+from .ops import ssm_scan  # noqa: F401
+from .ref import ssm_scan_ref  # noqa: F401

@@ -1,0 +1,76 @@
+"""Public wrapper for the selective-scan kernel, with a custom VJP whose
+backward is itself a (time-reversed) selective scan:
+
+    forward   h_t = a_t ⊙ h_{t-1} + b_t
+    backward  ĝ_t = ĥ_t + a_{t+1} ⊙ ĝ_{t+1}      (reverse scan)
+              ∂b_t = ĝ_t
+              ∂a_t = ĝ_t ⊙ h_{t-1}
+
+so training runs two single-pass kernels + one elementwise multiply —
+the same 3-passes-per-direction HBM profile as the forward.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssm_scan_ref
+from .ssm_scan import ssm_scan_pallas
+
+
+def _pad_bt(s: int, bt: int) -> int:
+    return min(bt, s) if s % bt else bt
+
+
+def _run(a, b, *, bt, bc, interpret, use_pallas):
+    if not use_pallas:
+        return ssm_scan_ref(a, b)
+    bsz, s, c, n = a.shape
+    # shrink tiles to divisors (smoke-test shapes)
+    while s % bt:
+        bt //= 2
+    while c % bc:
+        bc //= 2
+    if bt < 1 or bc < 1:
+        return ssm_scan_ref(a, b)
+    return ssm_scan_pallas(a, b, bt=bt, bc=bc, interpret=interpret)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5)
+)
+def ssm_scan(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bt: int = 256,
+    bc: int = 8,
+    interpret: bool = False,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """h with h_t = a_t ⊙ h_{t-1} + b_t over axis 1. a, b: (B, S, C, N)."""
+    return _run(a, b, bt=bt, bc=bc, interpret=interpret, use_pallas=use_pallas)
+
+
+def _fwd(a, b, bt, bc, interpret, use_pallas):
+    h = _run(a, b, bt=bt, bc=bc, interpret=interpret, use_pallas=use_pallas)
+    return h, (a, h)
+
+
+def _bwd(bt, bc, interpret, use_pallas, res, hbar):
+    a, h = res
+    # decay shifted one step left: a_{t+1}, zero at the end
+    a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+    g = _run(
+        jnp.flip(a_next, axis=1),
+        jnp.flip(hbar, axis=1),
+        bt=bt, bc=bc, interpret=interpret, use_pallas=use_pallas,
+    )
+    g = jnp.flip(g, axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    return (g * h_prev).astype(a.dtype), g.astype(a.dtype)
+
+
+ssm_scan.defvjp(_fwd, _bwd)

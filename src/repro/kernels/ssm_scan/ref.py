@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the selective scan: the parallel-prefix form."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t ⊙ h_{t-1} + b_t along axis 1, h_{-1} = 0."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    return jax.lax.associative_scan(combine, (a, b), axis=1)[1]

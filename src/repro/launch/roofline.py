@@ -1,0 +1,196 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute     = HLO_FLOPs_per_device / peak_FLOP/s
+  memory      = HLO_bytes_per_device / HBM_bw
+  collective  = collective_bytes_per_device / ICI_bw
+
+``compiled.cost_analysis()`` reports the *partitioned per-device* module,
+so no further division by chip count is applied. Collective bytes are not
+in cost_analysis: we parse the optimized HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async -start variants counted once; -done skipped).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (we charge one link — conservative; a 2D torus has more).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z\-]+)(?:-start)?\(", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op.endswith("-done") or op not in _COLLECTIVES:
+            continue
+        shapes = _SHAPE_RE.findall(stripped.split("=", 1)[1].split(op)[0])
+        if not shapes:
+            shapes = _SHAPE_RE.findall(stripped)
+        if not shapes:
+            continue
+        b = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+        per_kind[op] += b
+        counts[op] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "bytes_by_kind": per_kind, "counts": counts}
+
+
+def model_flops(arch: str, shape_name: str) -> Optional[float]:
+    """6·N·D (train) or 2·N·D (inference) with N = active params."""
+    from repro.configs import INPUT_SHAPES, get_config
+
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    n_active = active_params(cfg)
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * tokens
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shp.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Analytic active-parameter count (MoE: top-k routed + shared)."""
+    d, v = cfg.d_model, cfg.vocab
+    hd = cfg.hd() if cfg.n_heads else 0
+    total = v * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * v
+
+    def attn_params():
+        return d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+
+    def mla_params():
+        qh = cfg.nope_head_dim + cfg.rope_head_dim
+        return (
+            d * cfg.q_lora_rank
+            + cfg.q_lora_rank * cfg.n_heads * qh
+            + d * (cfg.kv_lora_rank + cfg.rope_head_dim)
+            + cfg.kv_lora_rank * cfg.n_heads * (cfg.nope_head_dim + cfg.v_head_dim)
+            + cfg.n_heads * cfg.v_head_dim * d
+        )
+
+    def mlp_params(ff):
+        return 3 * d * ff
+
+    def mamba1_params():
+        c = cfg.ssm_expand * d
+        dt_rank = max(1, d // 16)
+        return d * 2 * c + 4 * c + c * (dt_rank + 2 * cfg.ssm_state) + dt_rank * c + c * d
+
+    def mamba2_params():
+        c = cfg.ssm_expand * d
+        nh = c // cfg.ssm_head_dim
+        return d * (2 * c + 2 * cfg.ssm_state + nh) + 4 * (c + 2 * cfg.ssm_state) + c * d
+
+    from repro.models.model import stages_of
+
+    for st in stages_of(cfg):
+        kinds = list(st.pattern) * st.repeats + list(st.tail)
+        for kind in kinds:
+            if kind in ("attn", "local", "global"):
+                total += attn_params() + mlp_params(cfg.d_ff)
+            elif kind == "moe":
+                ff = cfg.d_expert_ff or cfg.d_ff
+                total += attn_params() + cfg.top_k * 3 * d * ff
+                total += cfg.n_shared_experts * 3 * d * ff
+            elif kind == "mla":
+                total += mla_params() + mlp_params(cfg.d_ff)
+            elif kind == "mla_moe":
+                ff = cfg.d_expert_ff or cfg.d_ff
+                total += mla_params() + cfg.top_k * 3 * d * ff
+                total += cfg.n_shared_experts * 3 * d * ff
+            elif kind == "mamba1":
+                total += mamba1_params()
+            elif kind in ("mamba2", "mamba2_attn"):
+                total += mamba2_params()
+                if kind == "mamba2_attn":
+                    total += attn_params() + mlp_params(cfg.d_ff)
+            elif kind == "dec":
+                total += 2 * attn_params() + mlp_params(cfg.d_ff)
+            elif kind == "enc":
+                total += attn_params() + mlp_params(cfg.d_ff)
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (attn_params() + mlp_params(cfg.d_ff))
+    return float(total)
+
+
+def roofline_from_compiled(compiled, mesh, *, arch: str, shape: str) -> Dict[str, Any]:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:  # pragma: no cover
+        hlo = ""
+    coll = collective_bytes_from_hlo(hlo)
+
+    chips = 1
+    for n in mesh.shape.values():
+        chips *= n
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll["total_bytes"] / ICI_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape)
+    mf_per_device = mf / chips if mf else None
+    return {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective": coll,
+        "model_flops_per_device": mf_per_device,
+        "useful_flops_ratio": (mf_per_device / flops) if (mf_per_device and flops) else None,
+        "chips": chips,
+    }

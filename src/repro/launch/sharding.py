@@ -1,0 +1,248 @@
+"""Sharding assignment — the JAX analogue of the paper's "database query
+optimizer distributes the computation".
+
+The paper's engine decides per join between co-partitioning (tensor
+parallelism) and broadcasting the small side (data parallelism) from
+relation statistics. Statically we make the same decisions:
+
+  * tensor-parallel ("model" axis): every parameter matrix's
+    output-feature / expert / channel dimension, per the rule table below —
+    this co-partitions the big join-aggregates (QKV/FFN matmuls) on their
+    contraction keys, producing psum/reduce-scatter collectives;
+  * fully-sharded data parallelism ("data", and "pod" when present):
+    the remaining large dimension of every parameter ≥ 1 MiB is sharded
+    over the batch axes (ZeRO-3-style), all-gathered per layer on use —
+    the "broadcast the small side" plan, amortized;
+  * batch axes carry activations; long_500k (batch=1) shards the KV-cache
+    sequence dimension over "data" instead (ring-style decode attention).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# name-based rules: which dimension gets the tensor-parallel axis.
+# value = index of the dim to place on "model" (negative ok), or None.
+_MODEL_DIM_RULES = (
+    ("router", None),
+    ("q_norm", None),
+    ("k_norm", None),
+    ("kv_norm", None),
+    ("norm_scale", None),
+    ("wq_a", 1),
+    ("wq_b", 1),
+    ("wkv_a", None),
+    ("wk_b", 1),
+    ("wv_b", 1),
+    ("wi_gate", -1),
+    ("wi_up", -1),
+    ("wo", 0),        # row-parallel: contraction dim sharded -> psum
+    ("wq", 1),
+    ("wk", 1),
+    ("wv", 1),
+    ("in_proj", 1),
+    ("out_proj", 0),
+    ("x_proj", 0),
+    ("dt_proj", 1),
+    ("conv_w", 1),
+    ("conv_b", 0),
+    ("dt_bias", 0),
+    ("a_log", 0),
+    ("d_skip", 0),
+    ("out_embed", 1),
+    ("embed", 0),     # vocab-parallel embedding table
+)
+
+_MOE_3D = ("wi_gate", "wi_up", "wo")  # (E, ·, ·): experts on "model"
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+        if hasattr(p, "name"):
+            return str(p.name)
+    return ""
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", "?"))))
+        for p in path
+    )
+
+
+def param_pspec(
+    path,
+    shape: Tuple[int, ...],
+    *,
+    model_size: int,
+    fsdp_axes: Tuple[str, ...],
+    fsdp_size: int,
+    min_fsdp_bytes: int = 1 << 20,
+    stacked: bool,
+) -> P:
+    """PartitionSpec for one parameter leaf. ``stacked`` marks scanned
+    stage parameters whose dim 0 is the layer axis (never sharded)."""
+    name = _leaf_name(path)
+    off = 1 if stacked else 0
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    model_dim = None
+    is_moe = any(f"{m}" == name for m in _MOE_3D) and (ndim - off) == 3
+    if is_moe:
+        model_dim = off  # expert axis
+    else:
+        for key, rule in _MODEL_DIM_RULES:
+            if name == key:
+                if rule is not None:
+                    model_dim = rule % ndim if rule >= 0 else ndim + rule
+                    if rule >= 0:
+                        model_dim = rule + off
+                break
+        else:
+            model_dim = None
+    if model_dim is not None and shape[model_dim] % model_size == 0:
+        spec[model_dim] = "model"
+
+    # FSDP: largest remaining divisible dim, if the leaf is big enough.
+    nbytes = int(np.prod(shape)) * 4
+    if fsdp_axes and nbytes >= min_fsdp_bytes:
+        cands = [
+            d for d in range(off, ndim)
+            if spec[d] is None and shape[d] % fsdp_size == 0
+        ]
+        if cands:
+            d = max(cands, key=lambda i: shape[i])
+            spec[d] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*spec)
+
+
+def param_pspecs(param_shapes, mesh, *, fsdp: bool = True) -> Any:
+    """PartitionSpec tree for a params pytree of ShapeDtypeStructs.
+
+    Scanned stage params (under "stages/*/scan") carry a leading layer
+    axis which stays unsharded.
+    """
+    model_size = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+    fsdp_size = mesh.shape["data"] if fsdp else 1
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        stacked = "/scan/" in f"/{ps}/"
+        return param_pspec(
+            path,
+            leaf.shape,
+            model_size=model_size,
+            fsdp_axes=dp_axes if fsdp else (),
+            fsdp_size=fsdp_size,
+            stacked=stacked,
+        )
+
+    return jax.tree_util.tree_map_with_path(assign, param_shapes)
+
+
+def batch_pspecs(batch_shapes, mesh) -> Any:
+    """Input batch: batch dimension over ("pod","data")."""
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bspec = axes if len(axes) > 1 else axes[0]
+
+    def assign(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(bspec, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shapes)
+
+
+def cache_pspecs(cache_shapes, mesh, *, batch: int, seq_sharded: bool) -> Any:
+    """KV/SSM cache sharding for serving.
+
+    batch ≥ data-axis: batch dim over "data", kv-heads/channels on "model".
+    batch == 1 (long_500k): shard the cache *sequence* dim over "data"
+    (decode attention's softmax reductions over the sharded key axis become
+    all-reduces — ring-decode).  Cache layouts (leading stacked layer axis
+    optional):
+       k/v   (B, S, Hkv, hd)     c/r (B, S, dc)
+       conv  (B, W-1, C)         ssm (B, C, N) | (B, H, N, P)
+    """
+    data = "data"
+
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        ps = _path_str(path)
+        stacked = "/scan/" in f"/{ps}/"
+        off = 1 if stacked else 0
+        nd = leaf.ndim
+        spec = [None] * nd
+        if not seq_sharded:
+            spec[off] = data        # batch dim
+        if name in ("k", "v"):
+            if seq_sharded and leaf.shape[off + 1] % 16 == 0:
+                spec[off + 1] = data
+            if leaf.shape[off + 2] % 16 == 0:
+                spec[off + 2] = "model"
+        elif name in ("c", "r"):
+            if seq_sharded and leaf.shape[off + 1] % 16 == 0:
+                spec[off + 1] = data
+        elif name == "conv":
+            if leaf.shape[off + 2] % 16 == 0:
+                spec[off + 2] = "model"
+        elif name == "ssm":
+            if leaf.shape[off + 1] % 16 == 0:
+                spec[off + 1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+def hint(x, *spec):
+    """Best-effort activation sharding constraint: applies
+    with_sharding_constraint(P(*spec)) when an ambient mesh is set (the
+    launcher/dry-run trace under ``jax.set_mesh``), else a no-op (CPU smoke
+    tests). Axis names absent from the ambient mesh are dropped, and axes
+    that do not divide the dimension are dropped (e.g. batch=1 decode)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        axis_sizes = dict(mesh.shape)
+
+        def keep(a, dim):
+            if a is None:
+                return None
+            if isinstance(a, tuple):
+                kept = tuple(x_ for x_ in a if x_ in mesh.axis_names)
+                if not kept:
+                    return None
+                tot = 1
+                for x_ in kept:
+                    tot *= axis_sizes[x_]
+                return kept if dim % tot == 0 else None
+            if a not in mesh.axis_names:
+                return None
+            return a if dim % axis_sizes[a] == 0 else None
+
+        cleaned = [keep(a, d) for a, d in zip(spec, x.shape)]
+        return jax.lax.with_sharding_constraint(x, P(*cleaned))
+    except Exception:  # pragma: no cover — never fail model code on hints
+        return x
+
+
+DP = ("pod", "data")  # batch axes superset; hint() drops absent names
+
+
+def to_shardings(pspecs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

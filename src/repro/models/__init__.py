@@ -1,0 +1,7 @@
+"""Model zoo: the 10 assigned architectures as config-selectable decoder /
+encoder-decoder / SSM / hybrid / MoE language models, built from shared
+pure-JAX blocks. Parameter-bearing contractions route through the
+relational engine (repro.relational) so training gradients are the
+RA-autodiff-generated queries."""
+
+from .model import Model, build_model  # noqa: F401

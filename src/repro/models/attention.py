@@ -1,0 +1,166 @@
+"""Attention: GQA with RoPE / sliding window / logit softcap, MLA
+(DeepSeek-V3 multi-head latent attention), KV caches, and a chunked
+(online-softmax) attention that never materializes the S×S score matrix —
+required to lower prefill_32k without O(S²) buffers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, softcap
+
+NEG_INF = -2.0e38
+
+
+_PAD_POS = -(10**9)  # sentinel position for padded KV slots
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,   # (Sq,) absolute query positions
+    k_pos: jnp.ndarray,   # (Sk,)
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """(Sq, Sk) additive mask."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = dk > _PAD_POS // 2   # padded slots always masked
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(
+    q: jnp.ndarray,       # (B, Sq, Hq, hd)
+    k: jnp.ndarray,       # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,       # (B, Sk, Hkv, hd)
+    *,
+    q_positions: jnp.ndarray,
+    k_positions: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    chunk_size: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """GQA attention. With ``chunk_size`` set, keys/values are processed in
+    blocks with an online softmax (flash-attention recurrence) under
+    ``lax.scan`` — O(Sq·chunk) live memory instead of O(Sq·Sk)."""
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    groups = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(b, sq, hkv, groups, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if chunk_size is None or sk <= chunk_size:
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+        logits = softcap(logits, logit_softcap)
+        logits = logits + _mask_bias(q_positions, k_positions, causal, window)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w, vf)
+        return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+    # --- chunked online-softmax path -------------------------------------
+    pad = (-sk) % chunk_size
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=_PAD_POS)
+        sk += pad
+    nkc = sk // chunk_size
+    kc = kf.reshape(b, nkc, chunk_size, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vf.reshape(b, nkc, chunk_size, hkv, hd).transpose(1, 0, 2, 3, 4)
+    kpos = k_positions.reshape(nkc, chunk_size)
+
+    def step(carry, inp):
+        m, l, acc = carry          # (b,hkv,g,sq), (b,hkv,g,sq), (b,hkv,g,sq,hd)
+        kb, vb, kp = inp
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb)
+        logits = softcap(logits, logit_softcap)
+        logits = logits + _mask_bias(q_positions, kp, causal, window)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(logits), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, groups, sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, hkv, groups, sq), dtype=jnp.float32)
+    a0 = jnp.zeros((b, hkv, groups, sq, hd), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kpos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,hkv,g,sq,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KVCache:
+    """Static-capacity ring-less cache: k/v (B, S_max, Hkv, hd), ``length``
+    scalar int32 = tokens currently valid."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32
+
+
+def cache_update(cache_k, cache_v, length, k_new, v_new):
+    """Insert (B, 1, Hkv, hd) new entries at ``length``."""
+    length = jnp.asarray(length, dtype=jnp.int32)
+    zero = jnp.zeros((), dtype=jnp.int32)
+    idx = (zero, length, zero, zero)
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), idx)
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), idx)
+    return ck, cv
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, Hq, hd)
+    cache_k: jnp.ndarray,  # (B, S, Hkv, hd) — S = full capacity
+    cache_v: jnp.ndarray,
+    length: jnp.ndarray,   # () int32 — number of valid positions
+    *,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    align: str = "left",   # "right": valid entries occupy the last slots
+) -> jnp.ndarray:
+    """Single-token decode against a cache; invalid/out-of-window positions
+    are masked. O(S) compute/memory — sub-quadratic by nature. Sliding-
+    window layers keep a right-aligned window-sized cache (align='right')."""
+    b, _, hq, hd = q.shape
+    _, s, hkv, _ = cache_k.shape
+    groups = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(b, hkv, groups, hd)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qf, cache_k.astype(jnp.float32))
+    logits = softcap(logits, logit_softcap)
+    pos = jnp.arange(s)
+    if align == "left":
+        ok = pos[None, :] < length
+        if window is not None:
+            ok = ok & (pos[None, :] > length - 1 - window)
+    else:
+        ok = pos[None, :] >= s - length
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, cache_v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)

@@ -1,0 +1,426 @@
+"""Layer blocks for all architecture families.
+
+Kinds:
+  attn / local / global — GQA decoder layer (full / sliding-window / full)
+  moe                   — GQA attention + token-choice MoE   (olmoe)
+  mla / mla_moe         — multi-head latent attention ± MoE  (deepseek-v3)
+  mamba1 / mamba2       — SSM blocks                         (falcon-mamba, zamba2)
+  mamba2_attn           — mamba2 + *shared* attention layer  (zamba2)
+  enc / dec             — whisper encoder / decoder layers
+
+Every block's apply has signature  (params, x, ctx) -> (x, cache_entry, aux)
+where ctx = {mode: train|prefill|decode, positions, cache (entry or None),
+length, enc_out, shared (zamba shared-attention params), cfg}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.relational import rel_linear
+
+from .attention import attention, cache_update, decode_attention
+from .common import apply_mrope, apply_rope, dense_init, layer_norm, rms_norm
+from .ffn import mlp_apply, mlp_init, moe_apply, moe_init
+from .ssm import mamba1_apply, mamba1_init, mamba2_apply, mamba2_init
+
+Ctx = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sublayer
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg, causal: bool = True):
+    hd = cfg.hd()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype=_dt(cfg)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype=_dt(cfg)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype=_dt(cfg)),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype=_dt(cfg)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype=_dt(cfg))
+        p["k_norm"] = jnp.zeros((hd,), dtype=_dt(cfg))
+    return p
+
+
+def gqa_apply(
+    p,
+    x: jnp.ndarray,
+    ctx: Ctx,
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+    rope: bool = True,
+    kv_source: Optional[jnp.ndarray] = None,   # cross-attention
+):
+    cfg = ctx["cfg"]
+    hd = cfg.hd()
+    b, s, _ = x.shape
+    mode = ctx["mode"]
+
+    q = rel_linear(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    src = kv_source if kv_source is not None else x
+    k = rel_linear(src, p["wk"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = rel_linear(src, p["wv"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if rope and kv_source is None:
+        pos = ctx["positions"]
+        if cfg.mrope_sections:
+            q = apply_mrope(q, pos, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, pos, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+
+    new_cache = None
+    if kv_source is not None:
+        # cross-attention: no cache, bidirectional over encoder states
+        out = attention(
+            q, k, v,
+            q_positions=jnp.arange(s), k_positions=jnp.arange(src.shape[1]),
+            causal=False, window=None,
+            logit_softcap=cfg.logit_softcap, chunk_size=cfg.attn_chunk,
+        )
+    elif mode == "decode":
+        ck, cv, length = ctx["cache"]["k"], ctx["cache"]["v"], ctx["length"]
+        if window is not None and ck.shape[1] <= window:
+            # Sliding-window layers keep a window-sized, right-aligned
+            # cache: shift left, append — O(window) per step, never O(S).
+            ck = jnp.concatenate([ck[:, 1:], k.astype(ck.dtype)], axis=1)
+            cv = jnp.concatenate([cv[:, 1:], v.astype(cv.dtype)], axis=1)
+            out = decode_attention(
+                q, ck, cv, jnp.minimum(length + 1, ck.shape[1]),
+                logit_softcap=cfg.logit_softcap, align="right",
+            )
+        else:
+            ck, cv = cache_update(ck, cv, length, k, v)
+            out = decode_attention(
+                q, ck, cv, length + 1,
+                window=window, logit_softcap=cfg.logit_softcap,
+            )
+        new_cache = {"k": ck, "v": cv}
+    else:
+        qpos = jnp.arange(s)
+        out = attention(
+            q, k, v,
+            q_positions=qpos, k_positions=qpos,
+            causal=causal, window=window,
+            logit_softcap=cfg.logit_softcap, chunk_size=cfg.attn_chunk,
+        )
+        if mode == "prefill":
+            cap = ctx["cache_len"]
+            if window is not None:
+                # right-aligned window cache
+                capw = min(cap, window)
+                keep = min(s, capw)
+                kk, vv = k[:, s - keep:], v[:, s - keep:]
+                padl = capw - keep
+                new_cache = {
+                    "k": jnp.pad(kk, ((0, 0), (padl, 0), (0, 0), (0, 0))).astype(_dt(cfg)),
+                    "v": jnp.pad(vv, ((0, 0), (padl, 0), (0, 0), (0, 0))).astype(_dt(cfg)),
+                }
+            else:
+                pad = cap - s
+                new_cache = {
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(_dt(cfg)),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(_dt(cfg)),
+                }
+    y = rel_linear(out.reshape(b, s, cfg.n_heads * hd), p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention sublayer (deepseek-v3, arXiv:2412.19437)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg):
+    ks = jax.random.split(key, 6)
+    qh = cfg.nope_head_dim + cfg.rope_head_dim
+    p = {
+        "wq_a": dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank), dtype=_dt(cfg)),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype=_dt(cfg)),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, cfg.n_heads * qh), dtype=_dt(cfg)),
+        "wkv_a": dense_init(
+            ks[2], (cfg.d_model, cfg.kv_lora_rank + cfg.rope_head_dim), dtype=_dt(cfg)
+        ),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype=_dt(cfg)),
+        "wk_b": dense_init(
+            ks[3], (cfg.kv_lora_rank, cfg.n_heads * cfg.nope_head_dim), dtype=_dt(cfg)
+        ),
+        "wv_b": dense_init(
+            ks[4], (cfg.kv_lora_rank, cfg.n_heads * cfg.v_head_dim), dtype=_dt(cfg)
+        ),
+        "wo": dense_init(
+            ks[5], (cfg.n_heads * cfg.v_head_dim, cfg.d_model), dtype=_dt(cfg)
+        ),
+    }
+    return p
+
+
+def mla_apply(p, x, ctx):
+    """MLA: queries/keys/values via low-rank compression; the decode cache
+    stores only (c_kv, k_rope) per position — the paper's memory saving —
+    and decode runs in the latent space with absorbed projections."""
+    cfg = ctx["cfg"]
+    b, s, _ = x.shape
+    h, dn, dr, dv, dc = (
+        cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+        cfg.v_head_dim, cfg.kv_lora_rank,
+    )
+    mode = ctx["mode"]
+    pos = ctx["positions"]
+
+    q = rel_linear(rms_norm(rel_linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kv = rel_linear(x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :dc], kv[..., dc:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)  # (B,S,1,dr)
+
+    wk_b = p["wk_b"].reshape(dc, h, dn)
+    wv_b = p["wv_b"].reshape(dc, h, dv)
+    scale = (dn + dr) ** -0.5
+
+    new_cache = None
+    if mode == "decode":
+        cc, cr, length = ctx["cache"]["c"], ctx["cache"]["r"], ctx["length"]
+        zero = jnp.zeros((), jnp.int32)
+        idx = (zero, jnp.asarray(length, jnp.int32), zero)
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), idx)
+        cr = jax.lax.dynamic_update_slice(
+            cr, k_rope[:, :, 0, :].astype(cr.dtype), idx
+        )
+        new_cache = {"c": cc, "r": cr}
+        # absorbed decode: score = (q_nope·W_k c) + (q_rope·k_rope)
+        q_lat = jnp.einsum("bshd,chd->bshc", q_nope, wk_b)       # (B,1,H,dc)
+        sc = jnp.einsum("bshc,btc->bhst", q_lat.astype(jnp.float32), cc.astype(jnp.float32))
+        sc += jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), cr.astype(jnp.float32))
+        sc *= scale
+        t = cc.shape[1]
+        ok = jnp.arange(t)[None, :] < (length + 1)
+        sc = jnp.where(ok[:, None, None, :], sc, -2.0e38)
+        w = jax.nn.softmax(sc, axis=-1)
+        o_lat = jnp.einsum("bhst,btc->bshc", w, cc.astype(jnp.float32))  # (B,1,H,dc)
+        out = jnp.einsum("bshc,chd->bshd", o_lat, wv_b.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        k_nope = jnp.einsum("btc,chd->bthd", c_kv, wk_b)
+        v = jnp.einsum("btc,chd->bthd", c_kv, wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1
+        )
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qpos = jnp.arange(s)
+        # pad v to qk head dim for the shared attention helper, then slice
+        out = attention(
+            qfull, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
+            q_positions=qpos, k_positions=qpos, causal=True,
+            chunk_size=cfg.attn_chunk, scale=scale,
+        )[..., :dv]
+        if mode == "prefill":
+            cap = ctx["cache_len"]
+            pad = cap - s
+            new_cache = {
+                "c": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))).astype(_dt(cfg)),
+                "r": jnp.pad(k_rope[:, :, 0, :], ((0, 0), (0, pad), (0, 0))).astype(_dt(cfg)),
+            }
+    y = rel_linear(out.reshape(b, s, h * dv), p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full layer blocks
+# ---------------------------------------------------------------------------
+
+
+def _ffn_dims(cfg, kind: str) -> int:
+    if kind in ("moe", "mla_moe"):
+        return cfg.d_expert_ff or cfg.d_ff
+    return cfg.d_ff
+
+
+def block_init(key, kind: str, cfg):
+    ks = jax.random.split(key, 4)
+    dt = _dt(cfg)
+    if kind in ("attn", "local", "global", "moe"):
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": gqa_init(ks[0], cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+        }
+        if kind == "moe":
+            p["moe"] = moe_init(
+                ks[1], cfg.d_model, _ffn_dims(cfg, kind), cfg.n_experts,
+                cfg.n_shared_experts, dtype=dt,
+            )
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype=dt)
+        return p
+    if kind in ("mla", "mla_moe"):
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": mla_init(ks[0], cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+        }
+        if kind == "mla_moe":
+            p["moe"] = moe_init(
+                ks[1], cfg.d_model, _ffn_dims(cfg, kind), cfg.n_experts,
+                cfg.n_shared_experts, dtype=dt,
+            )
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype=dt)
+        return p
+    if kind == "mamba1":
+        return {
+            "ln": jnp.zeros((cfg.d_model,), dt),
+            "ssm": mamba1_init(
+                key, cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                cfg.conv_width, dtype=dt,
+            ),
+        }
+    if kind in ("mamba2", "mamba2_attn"):
+        return {
+            "ln": jnp.zeros((cfg.d_model,), dt),
+            "ssm": mamba2_init(
+                key, cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                n_heads=(cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim,
+                head_dim=cfg.ssm_head_dim, conv_width=cfg.conv_width, dtype=dt,
+            ),
+        }
+    if kind == "enc":
+        return {
+            "ln1_s": jnp.ones((cfg.d_model,), dt), "ln1_b": jnp.zeros((cfg.d_model,), dt),
+            "attn": gqa_init(ks[0], cfg),
+            "ln2_s": jnp.ones((cfg.d_model,), dt), "ln2_b": jnp.zeros((cfg.d_model,), dt),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype=dt),
+        }
+    if kind == "dec":
+        return {
+            "ln1_s": jnp.ones((cfg.d_model,), dt), "ln1_b": jnp.zeros((cfg.d_model,), dt),
+            "attn": gqa_init(ks[0], cfg),
+            "lnx_s": jnp.ones((cfg.d_model,), dt), "lnx_b": jnp.zeros((cfg.d_model,), dt),
+            "xattn": gqa_init(ks[1], cfg),
+            "ln2_s": jnp.ones((cfg.d_model,), dt), "ln2_b": jnp.zeros((cfg.d_model,), dt),
+            "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype=dt),
+        }
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def shared_attn_init(key, cfg):
+    """zamba2 shared attention+MLP block: ONE param set reused at every
+    mamba2_attn position (arXiv:2411.15242)."""
+    ks = jax.random.split(key, 2)
+    dt = _dt(cfg)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "attn": gqa_init(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype=dt),
+    }
+
+
+def block_apply(p, kind: str, x, ctx: Ctx):
+    cfg = ctx["cfg"]
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+
+    if kind in ("attn", "local", "global", "moe", "mla", "mla_moe"):
+        window = cfg.window if kind == "local" else None
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        actx = dict(ctx)
+        actx["cache"] = ctx["cache"]["kv"] if ctx.get("cache") else None
+        if kind in ("mla", "mla_moe"):
+            a, kv = mla_apply(p["attn"], h, actx)
+        else:
+            a, kv = gqa_apply(p["attn"], h, actx, window=window)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind in ("moe", "mla_moe"):
+            f, aux = moe_apply(
+                p["moe"], h, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                shard_experts=cfg.moe_shard_experts,
+            )
+        else:
+            f = mlp_apply(p["mlp"], h)
+        x = x + f
+        if kv is not None:
+            cache["kv"] = kv
+        return x, cache, aux
+
+    if kind == "mamba1":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        y, st = mamba1_apply(
+            p["ssm"], h,
+            state=ctx.get("cache", {}).get("ssm1") if ctx.get("cache") else None,
+            chunk=cfg.ssm_chunk, scan_dtype=jnp.dtype(cfg.ssm_scan_dtype),
+            use_pallas=cfg.ssm_pallas,
+        )
+        cache["ssm1"] = st
+        return x + y, cache, aux
+
+    if kind in ("mamba2", "mamba2_attn"):
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        y, st = mamba2_apply(
+            p["ssm"], h,
+            head_dim=cfg.ssm_head_dim, state_dim=cfg.ssm_state,
+            state=ctx.get("cache", {}).get("ssm2") if ctx.get("cache") else None,
+            chunk=cfg.ssm_chunk, scan_dtype=jnp.dtype(cfg.ssm_scan_dtype),
+            use_pallas=cfg.ssm_pallas,
+        )
+        cache["ssm2"] = st
+        x = x + y
+        if kind == "mamba2_attn":
+            sp = ctx["shared"]
+            sctx = dict(ctx)
+            sctx["cache"] = ctx["cache"]["shared_kv"] if ctx.get("cache") else None
+            h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            a, kv = gqa_apply(sp["attn"], h, sctx)
+            x = x + a
+            x = x + mlp_apply(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+            if kv is not None:
+                cache["shared_kv"] = kv
+        return x, cache, aux
+
+    if kind == "enc":
+        h = layer_norm(x, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+        a, _ = gqa_apply(p["attn"], h, ctx, causal=False, rope=False)
+        x = x + a
+        h = layer_norm(x, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+        return x + mlp_apply(p["mlp"], h, activation=jax.nn.gelu), cache, aux
+
+    if kind == "dec":
+        sctx = dict(ctx)
+        sctx["cache"] = ctx["cache"]["kv"] if ctx.get("cache") else None
+        h = layer_norm(x, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+        a, kv = gqa_apply(p["attn"], h, sctx)
+        x = x + a
+        h = layer_norm(x, p["lnx_s"], p["lnx_b"], cfg.norm_eps)
+        a, _ = gqa_apply(p["xattn"], h, ctx, kv_source=ctx["enc_out"], rope=False)
+        x = x + a
+        h = layer_norm(x, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h, activation=jax.nn.gelu)
+        if kv is not None:
+            cache["kv"] = kv
+        return x, cache, aux
+
+    raise ValueError(f"unknown block kind {kind}")

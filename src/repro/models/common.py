@@ -1,0 +1,97 @@
+"""Shared model primitives: norms, activations, RoPE / M-RoPE, init."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray,                 # (B, S, H, hd)
+    positions: jnp.ndarray,         # (B, S) int32
+    theta: float = 10000.0,
+) -> jnp.ndarray:
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,                 # (B, S, H, hd)
+    positions: jnp.ndarray,         # (B, 3, S) int32 — t/h/w position triplets
+    sections: Tuple[int, int, int],  # rope dims (pairs) per axis, sums to hd/2
+    theta: float = 1_000_000.0,
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the rotary spectrum is split into three
+    sections rotated by temporal/height/width positions respectively
+    [arXiv:2409.12191]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # section id per frequency pair
+    sec = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=hd // 2
+    )
+    # Gather per-frequency positions: posf[b, f, s] = positions[b, sec[f], s]
+    posf = positions.astype(jnp.float32)[:, sec, :]     # (B, hd/2, S)
+    ang = jnp.einsum("bfs,f->bsf", posf, freqs)         # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)

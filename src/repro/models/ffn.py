@@ -1,0 +1,160 @@
+"""Feed-forward blocks: gated MLP and token-choice MoE.
+
+The MoE dispatch is the relational view the paper takes of conditional
+computation: routing is a token⋈expert join on the routed key, the combine
+is the Σ. The jit lowering uses the sort-by-expert + capacity layout so all
+shapes are static; experts are sharded on the ``model`` mesh axis (expert
+parallelism) and the gather/scatter become all-to-alls under SPMD.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import DP, hint
+from repro.relational import rel_linear
+
+from .common import dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "wi_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, activation=jax.nn.silu):
+    g = rel_linear(x, p["wi_gate"])
+    u = rel_linear(x, p["wi_up"])
+    return rel_linear(activation(g) * u, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(
+    key,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    n_shared: int = 0,
+    dtype=jnp.float32,
+):
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(keys[0], (d_model, n_experts), dtype=jnp.float32),
+        "wi_gate": dense_init(keys[1], (n_experts, d_model, d_ff), in_axis=1, dtype=dtype),
+        "wi_up": dense_init(keys[2], (n_experts, d_model, d_ff), in_axis=1, dtype=dtype),
+        "wo": dense_init(keys[3], (n_experts, d_ff, d_model), in_axis=1, dtype=dtype),
+    }
+    if n_shared:
+        p["shared"] = mlp_init(keys[4], d_model, d_ff * n_shared, dtype=dtype)
+    return p
+
+
+def _dispatch_group(xt, router, *, top_k, capacity, e):
+    """Routing + dispatch for ONE token group (T_g, D) → expert buffers.
+
+    vmapped over groups (= batch rows): the sort / slot / gather / scatter
+    are all group-local, so under SPMD they never cross the data axis.
+    Returns (xe (E, C, D), combine metadata, aux loss)."""
+    t, d = xt.shape
+    logits = xt.astype(jnp.float32) @ router             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)    # (T, k)
+
+    # auxiliary load-balance loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # Sort assignments by expert; position within expert = slot.
+    flat_expert = gate_idx.reshape(-1).astype(jnp.int32)  # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    same = jnp.cumsum(jax.nn.one_hot(se, e, dtype=jnp.int32), axis=0)
+    slot = same[jnp.arange(se.shape[0]), se] - 1         # (T*k,)
+    keep = slot < capacity
+    dest = (se * capacity + jnp.where(keep, slot, capacity - 1)).astype(jnp.int32)
+
+    buf_tok = jnp.zeros((e * capacity,), dtype=jnp.int32).at[dest].set(
+        jnp.where(keep, st, 0), mode="drop"
+    )
+    buf_used = jnp.zeros((e * capacity,), dtype=bool).at[dest].set(
+        keep, mode="drop"
+    )
+    xe = xt[buf_tok] * buf_used[:, None].astype(xt.dtype)
+    xe = xe.reshape(e, capacity, d)
+    return xe, (dest, st, sg, keep), aux
+
+
+def _combine_group(ye, meta, *, t, dtype):
+    """Scatter expert outputs (E·C, D) back to token order for one group."""
+    dest, st, sg, keep = meta
+    # combine in the activation dtype: the gate factor is f32 (softmax),
+    # but promoting the (T·k, D) contrib tensor to f32 doubles the bytes
+    # of the layer's biggest reshard.
+    contrib = ye[dest] * (sg * keep)[:, None].astype(ye.dtype)
+    return jnp.zeros((t, ye.shape[-1]), dtype=dtype).at[st].add(
+        contrib.astype(dtype)
+    )
+
+
+def moe_apply(
+    p,
+    x: jnp.ndarray,               # (B, S, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    shard_experts: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-choice top-k routing with static per-group capacity.
+
+    Groups = batch rows (data-sharded); tokens beyond an expert's capacity
+    within their group are dropped (combine weight zero) — the standard
+    static-shape TPU formulation, kept shard-local per group.
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    capacity = max(int(capacity_factor * s * top_k / e), top_k)
+
+    # Dispatch (group-local, vmapped over batch rows).
+    xe, meta, aux = jax.vmap(
+        functools.partial(_dispatch_group, top_k=top_k, capacity=capacity, e=e),
+        in_axes=(0, None),
+    )(x, p["router"])                                    # xe: (B, E, C, D)
+    aux = jnp.mean(aux)
+
+    # Expert FFN OUTSIDE the vmap so the partitioner sees both the batch
+    # and expert dims: tokens stay data-sharded, experts model-sharded —
+    # the GSPMD MoE layout. (Inside a vmap the batch dim is invisible to
+    # sharding constraints and the partitioner replicated the full global
+    # batch through this segment — §Perf olmoe iterations.)
+    if shard_experts:
+        xe = hint(xe, DP, "model", None, None)
+    g = jnp.einsum("becd,edf->becf", xe, p["wi_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["wi_up"])
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["wo"])
+    if shard_experts:
+        ye = hint(ye, DP, "model", None, None)
+    ye = ye.reshape(b, e * capacity, d)
+
+    # Combine (group-local, vmapped).
+    out = jax.vmap(
+        functools.partial(_combine_group, t=s, dtype=x.dtype)
+    )(ye, meta)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x).astype(out.dtype)
+    return out, aux

@@ -1,0 +1,320 @@
+"""Model assembly: config → staged, scanned decoder (+ optional encoder).
+
+Layers are grouped into *stages*; each stage is a repeating superblock
+(cfg.pattern) whose parameters are stacked on a leading axis and executed
+with ``jax.lax.scan`` — compile time is O(#distinct blocks), not O(depth),
+which keeps the 512-device dry-run tractable for 126-layer models.
+Remainder layers (n_layers % len(pattern)) run unscanned after the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import DP, hint
+from repro.relational import rel_embed, rel_linear
+
+from .blocks import block_apply, block_init, shared_attn_init
+from .common import dense_init, embed_init, layer_norm, rms_norm, softcap
+
+
+@dataclass(frozen=True)
+class Stage:
+    pattern: Tuple[str, ...]
+    repeats: int
+    tail: Tuple[str, ...] = ()
+
+
+def stages_of(cfg) -> List[Stage]:
+    if cfg.first_k_dense:
+        # deepseek-v3: leading dense-FFN layers, then MoE layers
+        return [
+            Stage(("mla" if cfg.mla else "attn",), cfg.first_k_dense),
+            Stage(
+                ("mla_moe" if cfg.mla else "moe",),
+                cfg.n_layers - cfg.first_k_dense,
+            ),
+        ]
+    pat = cfg.pattern
+    reps = cfg.n_layers // len(pat)
+    tail = pat[: cfg.n_layers % len(pat)]
+    return [Stage(pat, reps, tail)]
+
+
+class Model:
+    """Functional model: ``init`` → params pytree; ``train_logits`` /
+    ``prefill`` / ``decode_step`` pure functions of (params, batch)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.stages = stages_of(cfg)
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8 + len(self.stages))
+        dt = jnp.dtype(cfg.dtype)
+        params: Dict[str, Any] = {
+            "embed": embed_init(keys[0], (cfg.vocab, cfg.d_model), dtype=dt),
+            "ln_f": jnp.zeros((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["out_embed"] = dense_init(
+                keys[1], (cfg.d_model, cfg.vocab), dtype=dt
+            )
+        if "mamba2_attn" in _all_kinds(self.stages):
+            params["shared_attn"] = shared_attn_init(keys[2], cfg)
+        if cfg.encoder_layers:
+            ek = jax.random.split(keys[3], cfg.encoder_layers)
+            params["encoder"] = jax.vmap(
+                lambda k: block_init(k, "enc", cfg)
+            )(ek)
+            params["enc_ln_s"] = jnp.ones((cfg.d_model,), dt)
+            params["enc_ln_b"] = jnp.zeros((cfg.d_model,), dt)
+
+        def superblock_init(k, pattern):
+            ks = jax.random.split(k, len(pattern))
+            return {
+                f"{i}:{kind}": block_init(ks[i], kind, cfg)
+                for i, kind in enumerate(pattern)
+            }
+
+        params["stages"] = []
+        for si, st in enumerate(self.stages):
+            sk = jax.random.split(keys[4 + si], st.repeats)
+            stacked = jax.vmap(lambda k: superblock_init(k, st.pattern))(sk)
+            tailp = [
+                block_init(jax.random.fold_in(keys[4 + si], 1000 + i), kind, cfg)
+                for i, kind in enumerate(st.tail)
+            ]
+            params["stages"].append({"scan": stacked, "tail": tailp})
+        return params
+
+    # -- embedding / head ---------------------------------------------------
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = rel_embed(params["embed"], tokens.reshape(-1)).reshape(
+            *tokens.shape, cfg.d_model
+        )
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        # The vocab-parallel gather leaves the result's sharding ambiguous;
+        # pin activations to batch-sharded before the backbone.
+        return hint(x, DP, None, None)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        else:
+            logits = rel_linear(h, params["out_embed"])
+        return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+    # -- backbone -----------------------------------------------------------
+
+    def _run_stages(self, params, x, ctx, caches):
+        """caches: None (train) or list matching stages:
+        {"scan": stacked cache pytree or None, "tail": [entry,...]}.
+        Returns (x, new_caches, aux)."""
+        cfg = self.cfg
+        mode = ctx["mode"]
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+
+        for si, st in enumerate(self.stages):
+            sp = params["stages"][si]
+
+            def superblock(x, sparams, cache_entry):
+                aux = jnp.zeros((), jnp.float32)
+                new_entry = {}
+                for i, kind in enumerate(st.pattern):
+                    key = f"{i}:{kind}"
+                    bctx = dict(ctx)
+                    bctx["cache"] = (
+                        cache_entry[key] if cache_entry is not None else None
+                    )
+                    x, c, a = block_apply(sparams[key], kind, x, bctx)
+                    new_entry[key] = c
+                    aux = aux + a
+                return x, new_entry, aux
+
+            sb = superblock
+            if cfg.remat and mode == "train":
+                # "dots" saves every matmul output (no backward recompute
+                # of the big contractions); note dots_with_no_batch_dims
+                # is a no-op for transformer blocks — everything here
+                # carries a batch dim (measured: identical terms).
+                policy = (
+                    jax.checkpoint_policies.dots_saveable
+                    if cfg.remat_policy == "dots"
+                    else jax.checkpoint_policies.nothing_saveable
+                )
+                sb = jax.checkpoint(superblock, policy=policy)
+
+            def scan_step(carry, xs):
+                x, aux = carry
+                sparams, cache_entry = xs
+                x = hint(x, DP, None, None)
+                x, new_entry, a = sb(x, sparams, cache_entry)
+                return (x, aux + a), new_entry
+
+            cache_xs = caches[si]["scan"] if caches is not None else None
+            if cache_xs is None:
+                cache_xs = _none_like_scan(sp["scan"], st)
+            (x, aux_total), scan_cache = jax.lax.scan(
+                scan_step,
+                (x, aux_total),
+                (sp["scan"], cache_xs),
+                unroll=max(1, min(cfg.scan_unroll, st.repeats)),
+            )
+
+            tail_cache = []
+            for i, kind in enumerate(st.tail):
+                bctx = dict(ctx)
+                bctx["cache"] = (
+                    caches[si]["tail"][i] if caches is not None else None
+                )
+                x, c, a = block_apply(sp["tail"][i], kind, x, bctx)
+                tail_cache.append(c)
+                aux_total = aux_total + a
+            new_caches.append({"scan": scan_cache, "tail": tail_cache})
+        return x, new_caches, aux_total
+
+    def _encode(self, params, frames):
+        """Whisper encoder over stubbed frame embeddings (B, S_enc, D)."""
+        cfg = self.cfg
+        ctx = {"cfg": cfg, "mode": "train", "positions": None, "cache": None}
+
+        def step(x, lp):
+            x, _, _ = block_apply(lp, "enc", x, ctx)
+            return x, None
+
+        x, _ = jax.lax.scan(step, frames, params["encoder"])
+        return layer_norm(x, params["enc_ln_s"], params["enc_ln_b"], cfg.norm_eps)
+
+    def _positions(self, batch_shape, s, length=None, vis=0):
+        cfg = self.cfg
+        b = batch_shape
+        if cfg.mrope_sections:
+            if length is not None:
+                p = jnp.broadcast_to(length, (b, 3, 1)).astype(jnp.int32)
+                return p
+            grid = max(1, int(round(vis**0.5))) if vis else 1
+            idx = jnp.arange(vis)
+            tpos = jnp.zeros((vis,), jnp.int32)
+            hpos = (idx // grid).astype(jnp.int32)
+            wpos = (idx % grid).astype(jnp.int32)
+            start = jnp.asarray(max(grid, 1), jnp.int32)
+            text = start + jnp.arange(s - vis, dtype=jnp.int32)
+            pos = jnp.stack(
+                [
+                    jnp.concatenate([tpos, text]),
+                    jnp.concatenate([hpos, text]),
+                    jnp.concatenate([wpos, text]),
+                ]
+            )
+            return jnp.broadcast_to(pos[None], (b, 3, s))
+        if length is not None:
+            return jnp.broadcast_to(length, (b, 1)).astype(jnp.int32)
+        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    # -- entry points --------------------------------------------------------
+
+    def train_logits(self, params, batch):
+        """batch: tokens (B,S) [+ frames (B,S_enc,D) | patches (B,Sv,D)].
+        Returns (logits (B,S,V), aux)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed(params, tokens)
+        vis = 0
+        if cfg.vis_seq and "patches" in batch:
+            vis = batch["patches"].shape[1]
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            s = s + vis
+        ctx = {
+            "cfg": cfg,
+            "mode": "train",
+            "positions": self._positions(b, s, vis=vis),
+            "cache": None,
+        }
+        if cfg.encoder_layers:
+            ctx["enc_out"] = self._encode(params, batch["frames"])
+        if "shared_attn" in params:
+            ctx["shared"] = params["shared_attn"]
+        x, _, aux = self._run_stages(params, x, ctx, None)
+        if vis:
+            x = x[:, vis:]
+        return self._head(params, x), aux
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed(params, tokens)
+        vis = 0
+        if cfg.vis_seq and "patches" in batch:
+            vis = batch["patches"].shape[1]
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            s = s + vis
+        ctx = {
+            "cfg": cfg,
+            "mode": "prefill",
+            "positions": self._positions(b, s, vis=vis),
+            "cache": None,
+            "cache_len": cache_len,
+        }
+        if cfg.encoder_layers:
+            ctx["enc_out"] = self._encode(params, batch["frames"])
+        if "shared_attn" in params:
+            ctx["shared"] = params["shared_attn"]
+        x, caches, _ = self._run_stages(params, x, ctx, None)
+        if vis:
+            x = x[:, vis:]
+        return self._head(params, x[:, -1:]), caches
+
+    def decode_step(self, params, token, caches, length, enc_out=None):
+        """token: (B, 1) int32; caches from prefill (or dry-run specs);
+        length: () int32 count of valid cache entries."""
+        cfg = self.cfg
+        b = token.shape[0]
+        x = self._embed(params, token)
+        ctx = {
+            "cfg": cfg,
+            "mode": "decode",
+            "positions": self._positions(b, 1, length=length),
+            "length": length,
+        }
+        if cfg.encoder_layers:
+            assert enc_out is not None
+            ctx["enc_out"] = enc_out
+        if "shared_attn" in params:
+            ctx["shared"] = params["shared_attn"]
+        x, caches, _ = self._run_stages(params, x, ctx, caches)
+        return self._head(params, x), caches
+
+
+def _all_kinds(stages: List[Stage]) -> set:
+    out = set()
+    for st in stages:
+        out |= set(st.pattern) | set(st.tail)
+    return out
+
+
+def _none_like_scan(stacked_params, st: Stage):
+    """Scan xs placeholder when no cache is threaded: a pytree of Nones is
+    not scannable, so thread a zeros i32 per repeat instead and translate
+    to None inside the superblock (block ctx uses `cache_entry is None`)."""
+    return None
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

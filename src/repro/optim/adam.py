@@ -1,0 +1,71 @@
+"""Adam/AdamW — paper §6 uses Adam (η=0.1) for the GCN experiments.
+
+State dtype is configurable: the largest assigned configs (llama3-405b,
+deepseek-v3) keep moments in bf16 so params+state fit the single-pod HBM
+budget (see DESIGN.md §hardware-adaptation)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params, dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, dtype=dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(
+    params,
+    grads,
+    state,
+    *,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float = 0.0,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+
+    if grad_clip:
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m1 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v1 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = m1 / (1 - b1 ** step)
+        vh = v1 / (1 - b2 ** step)
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            m1.astype(m.dtype),
+            v1.astype(v.dtype),
+        )
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}

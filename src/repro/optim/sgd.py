@@ -1,0 +1,33 @@
+"""SGD (paper Appendix B/C use SGD with η=0.1 / 0.5)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0, dtype=jnp.float32):
+    if momentum:
+        return {
+            "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, dtype=dtype), params)
+        }
+    return {}
+
+
+def sgd_update(params, grads, state, *, lr: float = 0.1, momentum: float = 0.0):
+    if momentum:
+        new_mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(m.dtype), state["mom"], grads
+        )
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params,
+            new_mom,
+        )
+        return new_p, {"mom": new_mom}
+    new_p = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params,
+        grads,
+    )
+    return new_p, state

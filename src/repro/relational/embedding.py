@@ -1,0 +1,78 @@
+"""Embedding lookup as a relational join (gather ≡ key-equality join).
+
+The token stream is a COO relation keyed ⟨position, token-id⟩ with value 1
+(the relational one-hot); joining it with the embedding table on
+token-id == table-key and aggregating by position is the gather. The
+RA-generated backward is the mirrored join: scatter-add of output
+cotangents into table rows — the classic embedding gradient, derived by
+Algorithm 2 rather than written by hand.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compiler, fra
+from repro.core.autodiff import ra_autodiff
+from repro.core.kernels import ADD, MUL
+from repro.core.keys import L, eq_pred, jproj, project_key
+from repro.core.relation import CooRelation, DenseRelation
+
+
+@functools.cache
+def _embed_prog():
+    join = fra.Join(
+        eq_pred((1, 0)),        # ids.token == table.row
+        jproj(L(0)),            # keyed by position
+        MUL,                    # 1.0 × table row
+        fra.const("Ids", 2),
+        fra.scan("Table", 1),
+    )
+    q = fra.Query(fra.Agg(project_key(0), ADD, join), inputs=("Table",))
+    prog = ra_autodiff(q)
+    scans = {s.name: s.id for s in q.root.table_scans()}
+    consts = {c.ref: c.id for c in q.root.topo() if isinstance(c, fra.Const)}
+    return prog, scans, consts
+
+
+@jax.custom_vjp
+def rel_embed(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """table: (V, D); ids: (B,) int32 → (B, D)."""
+    prog, _, _ = _embed_prog()
+    b = ids.shape[0]
+    keys = jnp.stack([jnp.arange(b, dtype=jnp.int32), ids.astype(jnp.int32)], axis=1)
+    env = {
+        "Ids": CooRelation(keys, jnp.ones((b,), dtype=table.dtype), (b, table.shape[0])),
+        "Table": DenseRelation(table, 1),
+    }
+    return compiler.execute(prog.forward.root, env).data
+
+
+def _fwd(table, ids):
+    return rel_embed(table, ids), (table, ids)
+
+
+def _bwd(res, g):
+    table, ids = res
+    prog, scans, consts = _embed_prog()
+    b = ids.shape[0]
+    keys = jnp.stack([jnp.arange(b, dtype=jnp.int32), ids.astype(jnp.int32)], axis=1)
+    idrel = CooRelation(keys, jnp.ones((b,), dtype=table.dtype), (b, table.shape[0]))
+    trel = DenseRelation(table, 1)
+    env = {
+        "Ids": idrel,
+        "Table": trel,
+        f"__fwd_{scans['Table']}": trel,
+        f"__fwd_{consts['Ids']}": idrel,
+        "__seed": DenseRelation(g, 1),
+    }
+    dtable = compiler.execute(prog.grads["Table"], env)
+    dids = np.zeros(ids.shape, dtype=jax.dtypes.float0)
+    return dtable.data, dids
+
+
+rel_embed.defvjp(_fwd, _bwd)

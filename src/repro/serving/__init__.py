@@ -1,0 +1,1 @@
+from .serve import make_prefill_step, make_decode_step, init_cache  # noqa: F401

@@ -1,0 +1,104 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``decode_step`` is what the decode_32k / long_500k dry-run shapes lower:
+one new token against a seq_len-sized cache. Sliding-window layers carry
+window-sized caches; MLA carries the compressed (c_kv, k_rope) cache; SSM
+layers carry (conv window, state) — each O(1) or O(window) per step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model, stages_of
+
+
+def _attn_cache_entry(cfg, kind: str, batch: int, cache_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.hd() if cfg.n_heads else 0
+    if kind in ("mla", "mla_moe"):
+        return {
+            "kv": {
+                "c": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dt),
+                "r": jnp.zeros((batch, cache_len, cfg.rope_head_dim), dt),
+            }
+        }
+    if kind in ("attn", "global", "moe", "dec"):
+        return {
+            "kv": {
+                "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dt),
+            }
+        }
+    if kind == "local":
+        w = min(cfg.window or cache_len, cache_len)
+        return {
+            "kv": {
+                "k": jnp.zeros((batch, w, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, w, cfg.n_kv_heads, hd), dt),
+            }
+        }
+    if kind == "mamba1":
+        c = cfg.ssm_expand * cfg.d_model
+        return {
+            "ssm1": {
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, c), dt),
+                "ssm": jnp.zeros((batch, c, cfg.ssm_state), jnp.float32),
+            }
+        }
+    if kind in ("mamba2", "mamba2_attn"):
+        c = cfg.ssm_expand * cfg.d_model
+        nh = c // cfg.ssm_head_dim
+        entry = {
+            "ssm2": {
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, c + 2 * cfg.ssm_state), dt),
+                "ssm": jnp.zeros(
+                    (batch, nh, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+                ),
+            }
+        }
+        if kind == "mamba2_attn":
+            entry["shared_kv"] = {
+                "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dt),
+            }
+        return entry
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, cache_len: int):
+    """Zero-initialized cache pytree matching Model._run_stages structure."""
+    caches = []
+    for st in stages_of(cfg):
+        entry = {
+            f"{i}:{kind}": _attn_cache_entry(cfg, kind, batch, cache_len)
+            for i, kind in enumerate(st.pattern)
+        }
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (st.repeats,) + x.shape), entry
+        )
+        tail = [
+            _attn_cache_entry(cfg, kind, batch, cache_len) for kind in st.tail
+        ]
+        caches.append({"scan": stacked, "tail": tail})
+    return caches
+
+
+def make_prefill_step(model: Model, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    cfg = model.cfg
+
+    def decode_step(params, token, caches, length, enc_out=None):
+        logits, caches = model.decode_step(params, token, caches, length, enc_out)
+        return logits, caches
+
+    return decode_step

@@ -1,0 +1,2 @@
+from .losses import lm_loss  # noqa: F401
+from .trainer import make_train_step, TrainState  # noqa: F401

@@ -1,0 +1,25 @@
+"""Losses. Cross entropy computed in f32 with label masking (-100)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits (B,S,V) f32; labels (B,S) int32, -100 = ignore.
+
+    The gold logit is extracted with a masked reduction over V rather than
+    take_along_axis: with vocab-parallel logits the reduction stays sharded
+    (partial sum + all-reduce) instead of forcing an all-gather of the
+    full logits tensor."""
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    onehot = safe[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, vocab), 2
+    )
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,61 @@
+"""Training step factory.
+
+``make_train_step(model)`` returns a pure (params, opt_state, batch) →
+(params, opt_state, metrics) function. Gradients flow through the
+relational custom_vjp ops, i.e. the backward pass executes the
+RA-autodiff-generated queries.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam_init, adam_update
+
+from .losses import lm_loss
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def make_train_step(
+    model,
+    *,
+    lr: float = 3e-4,
+    aux_weight: float = 0.01,
+    grad_clip: float = 1.0,
+) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch)
+        loss = lm_loss(logits, batch["labels"])
+        total = loss + aux_weight * aux
+        return total, {"loss": loss, "aux": aux}
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state = adam_update(
+            params, grads, opt_state,
+            lr=lr, grad_clip=grad_clip,
+        )
+        metrics = dict(metrics, total=total)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, key, dtype=None) -> TrainState:
+    params = model.init(key)
+    opt_dtype = jnp.dtype(dtype or model.cfg.opt_state_dtype)
+    return TrainState(params, adam_init(params, dtype=opt_dtype))

@@ -1,0 +1,133 @@
+"""Semantics tests for the sparse interpreter (paper §2 examples)."""
+
+import numpy as np
+import pytest
+
+from repro.core import fra
+from repro.core.interpreter import run_query
+from repro.core.kernels import ADD, MATADD, MATMUL, MUL, LOGISTIC, IDENT
+from repro.core.keys import (
+    EMPTY_KEY,
+    KeyFn,
+    In,
+    JoinProj,
+    L,
+    R,
+    SelPred,
+    TRUE,
+    eq_pred,
+    identity_key,
+    jproj,
+    project_key,
+)
+
+
+def dense_to_rel(x):
+    """Matrix -> relation keyed by (row, col) of scalars."""
+    return {(i, j): float(x[i, j]) for i in range(x.shape[0]) for j in range(x.shape[1])}
+
+
+def rel_to_dense(rel, shape):
+    out = np.zeros(shape)
+    for k, v in rel.items():
+        out[k] = v
+    return out
+
+
+def test_figure1_aggregation_to_single_tuple():
+    # Paper §2.2: aggregate a 4x4 matrix stored as 2x2 chunks down to one 2x2.
+    X = {
+        (0, 0): np.array([[1.0, 4.0], [1.0, 2.0]]),
+        (0, 1): np.array([[1.0, 2.0], [4.0, 3.0]]),
+        (1, 0): np.array([[3.0, 1.0], [2.0, 2.0]]),
+        (1, 1): np.array([[2.0, 1.0], [2.0, 2.0]]),
+    }
+    q = fra.Query(
+        fra.Agg(EMPTY_KEY, MATADD, fra.scan("X", 2)),
+        inputs=("X",),
+    )
+    out = run_query(q, {"X": X})
+    assert set(out) == {()}
+    np.testing.assert_allclose(out[()], np.array([[7.0, 8.0], [9.0, 9.0]]))
+
+
+def matmul_query(a_name="A", b_name="B", kernel=MUL):
+    """F_MatMul ≡ Σ(grp, ⊕, ⋈(pred, proj, ⊗, τ(K), τ(K))) — paper §2.2."""
+    join = fra.Join(
+        eq_pred((1, 0)),                     # keyL[1] == keyR[0]
+        jproj(L(0), L(1), R(1)),             # ⟨keyL[0], keyL[1], keyR[1]⟩
+        kernel,
+        fra.scan(a_name, 2),
+        fra.scan(b_name, 2),
+    )
+    agg = fra.Agg(project_key(0, 2), ADD, join)  # grp: ⟨key[0], key[2]⟩
+    return fra.Query(agg, inputs=(a_name, b_name))
+
+
+def test_matmul_scalar_relations():
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(3, 4))
+    B = rng.normal(size=(4, 5))
+    q = matmul_query()
+    out = run_query(q, {"A": dense_to_rel(A), "B": dense_to_rel(B)})
+    np.testing.assert_allclose(rel_to_dense(out, (3, 5)), A @ B, rtol=1e-12)
+
+
+def test_matmul_chunked_relations():
+    # Appendix A: the same query over chunk values with the MatMul kernel.
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(2, 3, 8, 16))  # 2x3 grid of 8x16 chunks
+    B = rng.normal(size=(3, 2, 16, 4))
+    relA = {(i, j): A[i, j] for i in range(2) for j in range(3)}
+    relB = {(i, j): B[i, j] for i in range(3) for j in range(2)}
+    q = matmul_query(kernel=MATMUL)
+    out = run_query(q, {"A": relA, "B": relB})
+    dense_a = np.concatenate([np.concatenate(list(A[i]), axis=1) for i in range(2)], axis=0)
+    dense_b = np.concatenate([np.concatenate(list(B[i]), axis=1) for i in range(3)], axis=0)
+    ref = dense_a @ dense_b
+    got = np.concatenate(
+        [np.concatenate([out[(i, j)] for j in range(2)], axis=1) for i in range(2)],
+        axis=0,
+    )
+    np.testing.assert_allclose(got, ref, rtol=1e-10)
+
+
+def test_selection_modifies_values_and_keys():
+    rel = {(0,): 1.0, (1,): -2.0, (2,): 3.0}
+    q = fra.Query(
+        fra.Select(SelPred(eqs=((0, 1),), custom=None), project_key(0), LOGISTIC, fra.scan("X", 1)),
+        inputs=("X",),
+    )
+    out = run_query(q, {"X": rel})
+    assert set(out) == {(1,)}
+    np.testing.assert_allclose(out[(1,)], 1.0 / (1.0 + np.exp(2.0)))
+
+
+def test_join_duplicate_keys_requires_agg():
+    rel = {(0,): 1.0, (1,): 2.0}
+    join = fra.Join(
+        eq_pred(),                        # cross join (no predicate)
+        jproj(L(0)),                      # non-injective: drops right key
+        MUL,
+        fra.scan("A", 1),
+        fra.scan("B", 1),
+    )
+    q = fra.Query(join, inputs=("A", "B"))
+    with pytest.raises(ValueError, match="duplicate key"):
+        run_query(q, {"A": rel, "B": rel})
+    # Wrapped in Σ with identity grp, duplicates merge.
+    q2 = fra.Query(fra.Agg(identity_key(1), ADD, join), inputs=("A", "B"))
+    out = run_query(q2, {"A": rel, "B": rel})
+    assert out[(0,)] == pytest.approx(1.0 * 1.0 + 1.0 * 2.0)
+    assert out[(1,)] == pytest.approx(2.0 * 1.0 + 2.0 * 2.0)
+
+
+def test_add_total_derivative_semantics():
+    a = {(0,): 1.0, (1,): 2.0}
+    b = {(1,): 10.0, (2,): 20.0}
+    q = fra.Query(
+        fra.AddOp(fra.scan("A", 1), fra.scan("B", 1)),
+        inputs=("A", "B"),
+    )
+    out = run_query(q, {"A": a, "B": b})
+    assert out == {(0,): 1.0, (1,): 12.0, (2,): 20.0}

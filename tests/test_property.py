@@ -1,0 +1,257 @@
+"""Property-based tests (hypothesis) on the system's invariants:
+
+  * the chunked compiler agrees with the tuple-at-a-time interpreter
+    (the paper-semantics oracle) on randomized query graphs;
+  * relational auto-diff is linear in the seed cotangent (RJPs are
+    linear maps);
+  * the §4 RJP optimizations are semantics-preserving (all RJPOptions
+    settings produce the same gradients on the oracle);
+  * gradient of add = add of gradients (§5 total derivative);
+  * the Pallas blocked-matmul kernel matches its jnp oracle over
+    randomized shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compiler, fra
+from repro.core.autodiff import NO_OPTS, RJPOptions, ra_autodiff
+from repro.core.interpreter import evaluate
+from repro.core.kernels import (
+    ADD, IDENT, MUL, NEG, RELU, SQUARE, UnaryKernel, unary,
+)
+from repro.core.keys import (
+    EMPTY_KEY, TRUE, KeyFn, In, L, R, eq_pred, identity_key, jproj,
+    project_key,
+)
+from repro.core.relation import DenseRelation
+
+# ---------------------------------------------------------------------------
+# Random query graphs: interpreter (oracle) == compiler
+# ---------------------------------------------------------------------------
+
+_UNARIES = ("ident", "neg", "relu", "square")
+
+
+@st.composite
+def query_and_env(draw):
+    """A random single-input query graph + a full-grid environment."""
+    arity = draw(st.integers(1, 2))
+    extents = tuple(draw(st.integers(1, 3)) for _ in range(arity))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+
+    def full_grid(extents):
+        return {
+            k: float(v)
+            for k, v in np.ndenumerate(
+                rng.normal(size=extents).astype(np.float32)
+            )
+        }
+
+    env = {"T0": full_grid(extents)}
+    node: fra.Node = fra.scan("T0", arity)
+    cur_extents = list(extents)
+    n_leaves = 1
+
+    for _ in range(draw(st.integers(1, 3))):
+        op = draw(st.sampled_from(("select", "agg", "join")))
+        a = node.key_arity
+        if a == 0:
+            break  # aggregated to a scalar — nothing left to do
+        if op == "select":
+            kern = unary(draw(st.sampled_from(_UNARIES)))
+            perm = draw(st.permutations(range(a)))
+            node = fra.Select(TRUE, KeyFn(tuple(In(i) for i in perm)), kern, node)
+            cur_extents = [cur_extents[i] for i in perm]
+        elif op == "agg":
+            keep = draw(
+                st.lists(st.integers(0, a - 1), unique=True, max_size=a)
+            )
+            node = fra.Agg(KeyFn(tuple(In(i) for i in keep)), ADD, node)
+            cur_extents = [cur_extents[i] for i in keep]
+        else:  # join against a fresh leaf on one matching-extent dim
+            if a == 0:
+                continue
+            li = draw(st.integers(0, a - 1))
+            r_arity = draw(st.integers(1, 2))
+            rj = draw(st.integers(0, r_arity - 1))
+            r_extents = tuple(
+                cur_extents[li] if j == rj else draw(st.integers(1, 3))
+                for j in range(r_arity)
+            )
+            name = f"T{n_leaves}"
+            n_leaves += 1
+            env[name] = full_grid(r_extents)
+            leaf = fra.scan(name, r_arity)
+            # proj: all left comps + right comps except the joined one
+            proj = tuple(L(i) for i in range(a)) + tuple(
+                R(j) for j in range(r_arity) if j != rj
+            )
+            node = fra.Join(eq_pred((li, rj)), jproj(*proj), MUL, node, leaf)
+            cur_extents = cur_extents + [
+                r_extents[j] for j in range(r_arity) if j != rj
+            ]
+
+    q = fra.Query(node, inputs=tuple(sorted(env)))
+    return q, env, tuple(cur_extents)
+
+
+@settings(max_examples=40, deadline=None)
+@given(query_and_env())
+def test_compiler_matches_interpreter(qe):
+    q, env, out_extents = qe
+    oracle = evaluate(q.root, env)
+
+    dense_env = {}
+    for node in q.root.topo():
+        if isinstance(node, fra.TableScan):
+            rel = env[node.name]
+            ext = tuple(
+                max(k[i] for k in rel) + 1 for i in range(node.key_arity)
+            ) if rel else ()
+            data = np.zeros(ext, dtype=np.float32)
+            for k, v in rel.items():
+                data[k] = v
+            dense_env[node.name] = DenseRelation(jnp.asarray(data), node.key_arity)
+
+    got = compiler.execute(q.root, dense_env)
+    dense = np.asarray(got.data)
+    assert got.key_arity == len(out_extents)
+    for key, val in oracle.items():
+        np.testing.assert_allclose(dense[key], val, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Auto-diff properties (on the §2.2 matmul-loss query)
+# ---------------------------------------------------------------------------
+
+
+def _mm_loss_query():
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    mm = fra.Agg(project_key(0, 2), ADD, join)
+    return fra.Query(fra.Agg(EMPTY_KEY, ADD, mm), inputs=("A", "B"))
+
+
+def _rand_env(seed, n=3):
+    rng = np.random.default_rng(seed)
+    return {
+        "A": DenseRelation(
+            jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)), 2
+        ),
+        "B": DenseRelation(
+            jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)), 2
+        ),
+    }
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.floats(-3, 3, allow_nan=False),
+    st.floats(-3, 3, allow_nan=False),
+)
+def test_rjp_linear_in_seed(seed, a, b):
+    """RJPs are linear maps: grad(a·s1 + b·s2) == a·grad(s1) + b·grad(s2)."""
+    prog = ra_autodiff(_mm_loss_query())
+    env = _rand_env(seed)
+
+    def grad_with_seed(sval):
+        s = DenseRelation(jnp.asarray(sval, jnp.float32), 0)
+        _, g = compiler.grad_eval(prog, env, seed=s)
+        return np.asarray(g["A"].data)
+
+    g1 = grad_with_seed(1.0)
+    g2 = grad_with_seed(2.0)
+    gc = grad_with_seed(a * 1.0 + b * 2.0)
+    np.testing.assert_allclose(gc, a * g1 + b * g2, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_rjp_opts_semantics_preserving(seed):
+    """All §4 optimization settings yield identical gradients (oracle)."""
+    rng = np.random.default_rng(seed)
+    n = 2
+    env = {
+        "A": {(i, j): float(rng.normal()) for i in range(n) for j in range(n)},
+        "B": {(i, j): float(rng.normal()) for i in range(n) for j in range(n)},
+    }
+    q = _mm_loss_query()
+    ref = None
+    for opts in (
+        RJPOptions(True, True, True),
+        RJPOptions(False, True, True),
+        RJPOptions(True, False, True),
+        RJPOptions(True, True, False),
+        NO_OPTS,
+    ):
+        prog = ra_autodiff(q, opts=opts)
+        _, grads = prog.eval(env)
+        got = {k: dict(v) for k, v in grads.items()}
+        if ref is None:
+            ref = got
+        else:
+            assert got.keys() == ref.keys()
+            for name in ref:
+                assert got[name].keys() == ref[name].keys()
+                for key in ref[name]:
+                    assert got[name][key] == pytest.approx(
+                        ref[name][key], rel=1e-8, abs=1e-10
+                    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_grad_of_fanout_is_sum(seed):
+    """§5 total derivative: if a relation feeds the loss twice, its
+    gradient is the sum of both paths' contributions."""
+    # loss = Σ (A ⊗mul A) over the diagonal join: d/dA = 2A
+    join = fra.Join(
+        eq_pred((0, 0), (1, 1)), jproj(L(0), L(1)), MUL,
+        fra.scan("A", 2), fra.scan("A", 2),
+    )
+    q = fra.Query(fra.Agg(EMPTY_KEY, ADD, join), inputs=("A",))
+    prog = ra_autodiff(q)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(3, 3)).astype(np.float32))
+    _, grads = compiler.grad_eval(prog, {"A": DenseRelation(a, 2)})
+    np.testing.assert_allclose(
+        np.asarray(grads["A"].data), 2.0 * np.asarray(a), rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pallas blocked matmul vs oracle over randomized shapes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 4),
+    st.integers(1, 4),
+    st.integers(1, 4),
+    st.sampled_from((jnp.float32, jnp.bfloat16)),
+    st.integers(0, 2**31 - 1),
+)
+def test_pallas_matmul_random_shapes(mi, ki, ni, dtype, seed):
+    from repro.kernels.matmul import ops as mm_ops
+    from repro.kernels.matmul import ref as mm_ref
+
+    m, k, n = 8 * mi, 8 * ki, 8 * ni
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype=dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype=dtype)
+    got = mm_ops.blocked_matmul(a, b, interpret=True)
+    want = mm_ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )

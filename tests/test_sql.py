@@ -1,0 +1,183 @@
+"""SQL frontend: paper SQL fragments → FRA → (autodiff) → compiled
+execution, validated against the interpreter oracle and jax.grad."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler, fra
+from repro.core.autodiff import ra_autodiff
+from repro.core.interpreter import run_query
+from repro.core.relation import DenseRelation
+from repro.core.sql import SQLError, compile_sql, sql_autodiff
+
+
+# ---------------------------------------------------------------------------
+# The paper's §1 blocked matrix multiply SQL
+# ---------------------------------------------------------------------------
+
+MATMUL_SQL = """
+SELECT A.row, B.col, SUM(matrix_multiply(A.mat, B.mat))
+FROM A, B WHERE A.col = B.row
+GROUP BY A.row, B.col
+"""
+
+
+def test_paper_matmul_sql_compiles_and_runs():
+    q = compile_sql(
+        MATMUL_SQL,
+        schema={"A": ("row", "col"), "B": ("row", "col")},
+        inputs=("A", "B"),
+    )
+    assert isinstance(q.root, fra.Agg)
+    assert isinstance(q.root.child, fra.Join)
+
+    # 2×2 grid of 2×2 chunks, checked against jnp.matmul
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(2, 2, 2, 2)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2, 2, 2, 2)).astype(np.float32))
+    out = compiler.execute(
+        q.root, {"A": DenseRelation(a, 2), "B": DenseRelation(b, 2)}
+    )
+    full_a = np.block([[np.asarray(a[i, j]) for j in range(2)] for i in range(2)])
+    full_b = np.block([[np.asarray(b[i, j]) for j in range(2)] for i in range(2)])
+    full_o = np.block([[np.asarray(out.data[i, j]) for j in range(2)] for i in range(2)])
+    np.testing.assert_allclose(full_o, full_a @ full_b, rtol=1e-5)
+
+
+def test_paper_matmul_sql_gradients():
+    q = compile_sql(
+        MATMUL_SQL,
+        schema={"A": ("row", "col"), "B": ("row", "col")},
+        inputs=("A", "B"),
+    )
+    # loss = sum of all output entries: seed with ones over the output grid
+    prog = ra_autodiff(q)
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(2, 2, 2, 2)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2, 2, 2, 2)).astype(np.float32))
+    env = {"A": DenseRelation(a, 2), "B": DenseRelation(b, 2)}
+    seed = DenseRelation(jnp.ones((2, 2, 2, 2), jnp.float32), 2)
+    out, grads = compiler.grad_eval(prog, env, seed=seed)
+
+    def loss(a, b):
+        fa = jnp.concatenate([jnp.concatenate([a[i, j] for j in range(2)], 1)
+                              for i in range(2)], 0)
+        fb = jnp.concatenate([jnp.concatenate([b[i, j] for j in range(2)], 1)
+                              for i in range(2)], 0)
+        return jnp.sum(fa @ fb)
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(grads["A"].data), np.asarray(ga), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(grads["B"].data), np.asarray(gb), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# §2.3 logistic regression pipeline via views
+# ---------------------------------------------------------------------------
+
+LOGREG_SQL = """
+mm   := SELECT Rx.row, SUM(multiply(Rx.val, theta.val))
+        FROM Rx, theta WHERE Rx.col = theta.col GROUP BY Rx.row;
+pred := SELECT mm.row, logistic(mm.val) FROM mm;
+SELECT SUM(xent(pred.val, Ry.val)) FROM pred, Ry WHERE pred.row = Ry.row
+"""
+
+SCHEMA = {"Rx": ("row", "col"), "theta": ("col",), "Ry": ("row",)}
+
+
+def test_logreg_sql_matches_jax():
+    prog = sql_autodiff(LOGREG_SQL, SCHEMA, inputs=("theta",))
+    n, m = 64, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    X = jax.random.normal(k1, (n, m))
+    y = (jax.random.uniform(k2, (n,)) > 0.5).astype(jnp.float32)
+    theta = jax.random.normal(k3, (m,)) * 0.1
+
+    env = {
+        "Rx": DenseRelation(X, 2),
+        "Ry": DenseRelation(y, 1),
+        "theta": DenseRelation(theta, 1),
+    }
+    loss, grads = compiler.grad_eval(prog, env)
+
+    def jax_loss(theta):
+        yhat = jax.nn.sigmoid(X @ theta)
+        return jnp.sum(-y * jnp.log(yhat) + (y - 1.0) * jnp.log1p(-yhat))
+
+    lj, gj = jax.value_and_grad(jax_loss)(theta)
+    np.testing.assert_allclose(float(loss.data), float(lj), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(grads["theta"].data), np.asarray(gj), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_logreg_sql_interpreter_oracle():
+    """The SQL-compiled query agrees with the tuple-at-a-time interpreter."""
+    q = compile_sql(LOGREG_SQL, SCHEMA, inputs=("theta",))
+    rng = np.random.default_rng(2)
+    n, m = 6, 3
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    y = (rng.uniform(size=n) > 0.5).astype(np.float32)
+    theta = rng.normal(size=m).astype(np.float32) * 0.1
+
+    sparse_env = {
+        "Rx": {(i, j): float(X[i, j]) for i in range(n) for j in range(m)},
+        "Ry": {(i,): float(y[i]) for i in range(n)},
+        "theta": {(j,): float(theta[j]) for j in range(m)},
+    }
+    out = run_query(q, sparse_env)
+    dense_env = {
+        "Rx": DenseRelation(jnp.asarray(X), 2),
+        "Ry": DenseRelation(jnp.asarray(y), 1),
+        "theta": DenseRelation(jnp.asarray(theta), 1),
+    }
+    dense_out = compiler.execute(q.root, dense_env)
+    np.testing.assert_allclose(out[()], float(dense_out.data), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Grammar / error cases
+# ---------------------------------------------------------------------------
+
+
+def test_single_table_selection_with_literal_pred():
+    q = compile_sql(
+        "SELECT T.i, relu(T.v) FROM T WHERE T.i = 1",
+        schema={"T": ("i",)},
+        inputs=("T",),
+    )
+    out = run_query(q, {"T": {(0,): -5.0, (1,): -3.0, (2,): 7.0}})
+    assert out == {(1,): 0.0}
+
+
+def test_bad_kernel_name_raises():
+    with pytest.raises(SQLError, match="unknown kernel"):
+        compile_sql("SELECT frobnicate(T.v) FROM T", {"T": ("i",)}, ("T",))
+
+
+def test_three_way_join_rejected_with_hint():
+    with pytest.raises(SQLError, match="use views"):
+        compile_sql(
+            "SELECT SUM(multiply(A.v, B.v)) FROM A, B, C",
+            {"A": ("i",), "B": ("i",), "C": ("i",)},
+            ("A",),
+        )
+
+
+def test_key_used_as_value_rejected():
+    with pytest.raises(SQLError, match="is a key"):
+        compile_sql(
+            "SELECT logistic(T.i) FROM T", {"T": ("i",)}, ("T",)
+        )
+
+
+def test_group_by_mismatch_rejected():
+    with pytest.raises(SQLError, match="GROUP BY"):
+        compile_sql(
+            "SELECT A.row, SUM(multiply(A.v, B.v)) FROM A, B "
+            "WHERE A.col = B.col GROUP BY A.col",
+            {"A": ("row", "col"), "B": ("col",)},
+            ("A",),
+        )

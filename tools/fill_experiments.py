@@ -1,0 +1,43 @@
+"""Regenerate the §Dry-run / §Roofline tables inside EXPERIMENTS.md from
+experiments/dryrun/*.json (between the <!-- ROOFLINE_TABLE --> and
+<!-- DRYRUN_TABLE --> markers).
+
+Usage: python tools/fill_experiments.py
+"""
+
+import io
+import re
+import subprocess
+import sys
+
+MD = "EXPERIMENTS.md"
+
+
+def main() -> None:
+    out = subprocess.run(
+        [sys.executable, "tools/roofline_table.py"],
+        capture_output=True, text=True, check=True,
+    ).stdout
+    single, multi = out.split("## Multi-pod lowering proof")
+    single = single.replace("## Single-pod roofline", "### Single-pod roofline")
+    multi = "### Multi-pod lowering proof" + multi
+
+    with open(MD) as f:
+        text = f.read()
+    text = re.sub(
+        r"<!-- DRYRUN_TABLE -->.*?(?=\n## )",
+        "<!-- DRYRUN_TABLE -->\n\n" + multi.strip() + "\n\n",
+        text, flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+        "<!-- ROOFLINE_TABLE -->\n\n" + single.strip() + "\n\n",
+        text, flags=re.S,
+    )
+    with open(MD, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Diagnostic: compile one dry-run combo and histogram the largest tensors
+and collectives in the partitioned HLO."""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import collections
+import re
+
+import jax
+
+from repro.launch.dryrun import build_step
+from repro.launch.mesh import make_production_mesh
+
+BY = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "pred": 1, "s8": 1, "u8": 1, "s64": 8}
+PAT = re.compile(r"(bf16|f16|f32|s32|u32|pred|s8|u8|s64)\[([\d,]+)\]")
+
+
+def bytes_of(dt, dims):
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * BY[dt]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--min-gb", type=float, default=0.2)
+    ap.add_argument("--set", action="append", default=[], metavar="K=V")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = int(v)
+        except ValueError:
+            overrides[k] = v
+
+    mesh = make_production_mesh()
+    with jax.set_mesh(mesh):
+        fn, fargs = build_step(
+            args.arch, args.shape, mesh, unroll=args.unroll,
+            overrides=overrides or None,
+        )
+        compiled = fn.lower(*fargs).compile()
+    txt = compiled.as_text()
+
+    sizes = collections.Counter()
+    colls = collections.Counter()
+    for line in txt.splitlines():
+        line = line.strip()
+        m = PAT.search(line)
+        if not m:
+            continue
+        dt, dims = m.groups()
+        b = bytes_of(dt, dims)
+        rhs = line.split("=", 1)[1] if "=" in line else line
+        mo = re.search(r"\]\}?\s+([a-z][a-z0-9\-]*)", rhs)
+        op = mo.group(1) if mo else "?"
+        if any(c in line for c in ("all-reduce", "all-gather", "all-to-all", "collective-permute", "reduce-scatter")):
+            colls[(dt, dims, op)] += 1
+        if b >= args.min_gb * 1e9:
+            sizes[(dt, dims, op)] += 1
+
+    print("== largest tensors ==")
+    for k, c in sorted(sizes.items(), key=lambda kv: -bytes_of(kv[0][0], kv[0][1]))[:25]:
+        print(f"{bytes_of(k[0], k[1])/1e9:8.2f} GB  {k[0]}[{k[1]}] x{c}  {k[2]}")
+    print("== collectives ==")
+    for k, c in sorted(colls.items(), key=lambda kv: -bytes_of(kv[0][0], kv[0][1]) * kv[1])[:25]:
+        print(f"{bytes_of(k[0], k[1])*c/1e9:8.2f} GB total  {k[0]}[{k[1]}] x{c}  {k[2]}")
+
+    print("temp GB:", compiled.memory_analysis().temp_size_in_bytes / 1e9)
+
+
+if __name__ == "__main__":
+    main()

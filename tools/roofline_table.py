@@ -1,0 +1,80 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+table (single-pod records) + the multi-pod lowering-proof table.
+
+Usage:  python tools/roofline_table.py [--dir experiments/dryrun]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    recs = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+
+    shapes = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+    def order(r):
+        return (r["arch"], shapes.index(r["shape"]) if r["shape"] in shapes else 9)
+
+    print("## Single-pod roofline (16×16 = 256 chips, per-device terms)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "HLO GFLOPs/dev | useful ratio | bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted([r for r in recs if not r.get("multi_pod")], key=order):
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"skipped: {r['reason']} | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"ERROR | — | — | — |")
+            continue
+        ro = r["roofline"]
+        ur = ro.get("useful_flops_ratio")
+        mem = r.get("memory_analysis") or {}
+        bytes_dev = (mem.get("argument_size_in_bytes", 0)
+                     + mem.get("temp_size_in_bytes", 0))
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(ro['compute_s'])} | "
+            f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+            f"**{ro['dominant'].replace('_s','')}** | "
+            f"{ro['hlo_flops_per_device']/1e9:,.0f} | "
+            f"{ur:.2f}" + (" |" if ur is not None else "— |") +
+            f" {bytes_dev/2**30:.1f} GiB |"
+        )
+
+    print("\n## Multi-pod lowering proof (2×16×16 = 512 chips)\n")
+    print("| arch | shape | status | compile | collective bytes/dev |")
+    print("|---|---|---|---|---|")
+    for r in sorted([r for r in recs if r.get("multi_pod")], key=order):
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | skipped ({r['reason']}) | — | — |")
+        elif r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | **ERROR** | — | — |")
+        else:
+            cb = r["roofline"]["collective"]["total_bytes"]
+            print(f"| {r['arch']} | {r['shape']} | ok | "
+                  f"{r['compile_s']:.0f}s | {cb/2**20:,.0f} MiB |")
+
+
+if __name__ == "__main__":
+    main()
