@@ -1,7 +1,8 @@
-"""Benchmark harness utilities: timing + CSV emission."""
+"""Benchmark harness utilities: timing + CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, List, Tuple
 
@@ -32,3 +33,15 @@ def record(name: str, us: float, derived: str = "") -> None:
 
 def emit_header() -> None:
     print("name,us_per_call,derived")
+
+
+def emit_json(path: str, rows=None) -> None:
+    """Dump rows (default: everything recorded so far) as a BENCH_*.json
+    artifact so wins are machine-readable across PRs."""
+    rows = ROWS if rows is None else rows
+    payload = [
+        {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows
+    ]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(payload)} rows)")

@@ -1,21 +1,24 @@
 """Benchmark driver: one benchmark per paper table/figure.
 
-  logreg        §2.3 running example — RA-autodiff overhead vs jax.grad
-  gcn           Tables 2–3 — GCN per-epoch, mini-batch + full-graph
-  nnmf          Figure 2 — non-negative matrix factorization per-epoch
-  kge           Figure 3 — TransE/TransR 100-iteration time
-  rjp_ablation  §4 — RJP optimizations on/off
+  logreg           §2.3 running example — RA-autodiff overhead vs jax.grad
+  gcn              Tables 2–3 — GCN per-epoch, mini-batch + full-graph
+  nnmf             Figure 2 — non-negative matrix factorization per-epoch
+  kge              Figure 3 — TransE/TransR 100-iteration time
+  rjp_ablation     §4 — RJP optimizations on/off
+  engine_overhead  staged engine: eager re-lowering vs cached Compiled
+
+Each suite's rows are also written to BENCH_<suite>.json.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
 """
 
 import sys
 
-from .common import emit_header
+from .common import ROWS, emit_header, emit_json
 
 
 def main() -> None:
-    from . import gcn, kge, logreg, nnmf, rjp_ablation
+    from . import engine_overhead, gcn, kge, logreg, nnmf, rjp_ablation
 
     suites = {
         "logreg": logreg.run,
@@ -23,6 +26,7 @@ def main() -> None:
         "nnmf": nnmf.run,
         "kge": kge.run,
         "rjp_ablation": rjp_ablation.run,
+        "engine_overhead": engine_overhead.run,
     }
     names = sys.argv[1:] or list(suites)
     unknown = [n for n in names if n not in suites]
@@ -31,7 +35,9 @@ def main() -> None:
     emit_header()
     for n in names:
         print(f"# --- {n} ---")
+        start = len(ROWS)
         suites[n]()
+        emit_json(f"BENCH_{n}.json", ROWS[start:])
 
 
 if __name__ == "__main__":

@@ -63,7 +63,7 @@ def main() -> None:
     print(f"preset={args.preset}  params={n_params/1e6:.1f}M  "
           f"layers={cfg.n_layers} d={cfg.d_model} experts={cfg.n_experts}")
 
-    step_fn = jax.jit(make_train_step(model, lr=args.lr))
+    step_fn = make_train_step(model, lr=args.lr)
     batches = synthetic_lm_batches(cfg, args.batch, args.seq, seed=0)
     params, opt_state = state.params, state.opt_state
 

@@ -13,8 +13,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import compiler, fra
+from repro.core import fra
 from repro.core.autodiff import ra_autodiff
+from repro.core.engine import RAEngine
 from repro.core.relation import DenseRelation
 from repro.core.sql import compile_sql
 
@@ -54,22 +55,29 @@ def main() -> None:
     y = (X @ jax.random.normal(k2, (m,)) > 0).astype(jnp.float32)
     theta = jnp.zeros((m,))
 
-    @jax.jit
-    def step(theta):
-        env = {
-            "Rx": DenseRelation(X, 2),
-            "Ry": DenseRelation(y, 1),
-            "theta": DenseRelation(theta, 1),
-        }
-        loss, grads = compiler.grad_eval(prog, env)
-        # loss is summed over n tuples — scale the step accordingly
-        return theta - (1.0 / n) * grads["theta"].data, loss.data
+    # Staged pipeline (core/engine.py): the program is lowered once for
+    # this environment signature, the planner picks a physical plan per
+    # join, and the jitted Compiled step is reused every iteration.
+    env = {
+        "Rx": DenseRelation(X, 2),
+        "Ry": DenseRelation(y, 1),
+        "theta": DenseRelation(theta, 1),
+    }
+    engine = RAEngine(prog)
+    compiled = engine.lower(env).compile()
+    print("\n=== physical plans (planner.plan_query) ===")
+    for nid, plan in compiled.plans.items():
+        print(f"join #{nid}: {plan.kind}  costs={ {k: f'{v:.0f}' for k, v in plan.costs.items()} }")
 
-    print("\n=== training (gradient = executed gradient query) ===")
+    print("\n=== training (gradient = compiled gradient query) ===")
     for i in range(50):
-        theta, loss = step(theta)
+        loss, grads = compiled(env)
+        # loss is summed over n tuples — scale the step accordingly
+        theta = env["theta"].data - (1.0 / n) * grads["theta"].data
+        env["theta"] = DenseRelation(theta, 1)
         if i % 5 == 0 or i == 49:
-            print(f"step {i:3d}   loss {float(loss)/n:.4f}")
+            print(f"step {i:3d}   loss {float(loss.data)/n:.4f}")
+    print(f"graph lowerings over 50 steps: {engine.trace_count}")
 
     acc = float(jnp.mean(((X @ theta) > 0).astype(jnp.float32) == y))
     print(f"\ntrain accuracy: {acc:.3f}")

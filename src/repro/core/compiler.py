@@ -362,14 +362,17 @@ def _restricted_join(
 # ---------------------------------------------------------------------------
 
 
-def execute(
+def _execute_graph(
     root: fra.Node,
     env: Env,
     cache: Optional[Env] = None,
     *,
     fuse_join_agg: bool = True,
 ) -> AnyRel:
-    """Execute a query graph over chunked relations.
+    """Walk a query graph over chunked relations, lowering each node to XLA
+    ops. This is the engine's *lowering primitive*: it runs once per trace
+    on the staged path (core/engine.py) and once per call on the eager
+    path.
 
     ``fuse_join_agg=False`` materializes every Join's output individually
     instead of fusing Σ∘⋈ into one einsum — needed when a gradient program
@@ -538,8 +541,22 @@ def execute(
     return ex(root)
 
 
+def execute(
+    root: fra.Node,
+    env: Env,
+    cache: Optional[Env] = None,
+    *,
+    fuse_join_agg: bool = True,
+) -> AnyRel:
+    """Eager execution: the engine's eager mode on an anonymous graph —
+    re-walks the graph on every call, no engine registered (callers often
+    build throwaway graphs; interning them would only pin memory). Use
+    ``RAEngine(...).lower(env).compile(...)`` for the cached jit path."""
+    return _execute_graph(root, env, cache, fuse_join_agg=fuse_join_agg)
+
+
 def run_query(q: fra.Query, env: Env) -> AnyRel:
-    return execute(q.root, env)
+    return _execute_graph(q.root, env)
 
 
 def execute_with_cache(
@@ -553,7 +570,7 @@ def execute_with_cache(
     program was built without join-agg fusion and needs the join
     intermediates."""
     fwd: Env = {}
-    out = execute(root, env, cache=fwd, fuse_join_agg=fuse_join_agg)
+    out = _execute_graph(root, env, cache=fwd, fuse_join_agg=fuse_join_agg)
     return out, fwd
 
 
@@ -564,19 +581,10 @@ def grad_eval(
     *,
     fuse_join_agg: bool = True,
 ) -> Tuple[AnyRel, Dict[str, AnyRel]]:
-    """Execute a GradientProgram (autodiff.py) entirely on the compiled
-    path: chunked forward with cache, then each gradient query graph."""
-    from .relation import scalar_relation
+    """Execute a GradientProgram (autodiff.py) on the compiled path:
+    chunked forward with cache, then each gradient query graph. Thin
+    wrapper over the engine's eager mode; the staged equivalent is
+    ``RAEngine(prog).lower(env).compile(...)``."""
+    from .engine import engine_for
 
-    out, fwd = execute_with_cache(
-        prog.forward.root, env, fuse_join_agg=fuse_join_agg
-    )
-    if seed is None:
-        if not (isinstance(out, DenseRelation) and out.key_arity == 0):
-            raise ValueError("default seed requires a scalar-loss output")
-        seed = DenseRelation(jnp.ones_like(out.data), key_arity=0)
-    genv = dict(env)
-    genv.update(fwd)
-    genv["__seed"] = seed
-    grads = {name: execute(rootn, genv) for name, rootn in prog.grads.items()}
-    return out, grads
+    return engine_for(prog, fuse_join_agg=fuse_join_agg).eager(env, seed)

@@ -19,6 +19,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -84,6 +85,39 @@ class CooRelation:
 
 
 Relation = (DenseRelation, CooRelation)
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration: relations cross jax.jit / shard boundaries as
+# containers whose array payloads are leaves and whose relational schema
+# (key arity, COO extents) is static aux data. This is what lets the staged
+# engine (core/engine.py) jit a whole relation environment and attach
+# planner-emitted shardings per relation.
+# ---------------------------------------------------------------------------
+
+
+def _dense_flatten(rel: DenseRelation):
+    return (rel.data,), rel.key_arity
+
+
+def _dense_unflatten(key_arity: int, children) -> DenseRelation:
+    (data,) = children
+    return DenseRelation(data, key_arity)
+
+
+def _coo_flatten(rel: CooRelation):
+    return (rel.keys, rel.values), rel.extents
+
+
+def _coo_unflatten(extents: Tuple[int, ...], children) -> CooRelation:
+    keys, values = children
+    return CooRelation(keys, values, extents)
+
+
+jax.tree_util.register_pytree_node(
+    DenseRelation, _dense_flatten, _dense_unflatten
+)
+jax.tree_util.register_pytree_node(CooRelation, _coo_flatten, _coo_unflatten)
 
 
 def from_blocked(x, block_shape: Tuple[int, ...]) -> DenseRelation:

@@ -146,7 +146,7 @@ def build_step(
             lambda l, sh: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sh),
             specs["batch"], bshard,
         )
-        step = make_train_step(model)
+        step = make_train_step(model, jit=False)
         fn = jax.jit(
             step,
             in_shardings=(pshard, oshard, bshard),

@@ -5,7 +5,9 @@ The token stream is a COO relation keyed ⟨position, token-id⟩ with value 1
 token-id == table-key and aggregating by position is the gather. The
 RA-generated backward is the mirrored join: scatter-add of output
 cotangents into table rows — the classic embedding gradient, derived by
-Algorithm 2 rather than written by hand.
+Algorithm 2 rather than written by hand. Both directions step through the
+staged engine (core/engine.py): lowered once per (batch, vocab, dim)
+signature, jit-cached across steps.
 """
 
 from __future__ import annotations
@@ -16,8 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compiler, fra
+from repro.core import fra
 from repro.core.autodiff import ra_autodiff
+from repro.core.engine import jit_execute
 from repro.core.kernels import ADD, MUL
 from repro.core.keys import L, eq_pred, jproj, project_key
 from repro.core.relation import CooRelation, DenseRelation
@@ -49,7 +52,7 @@ def rel_embed(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
         "Ids": CooRelation(keys, jnp.ones((b,), dtype=table.dtype), (b, table.shape[0])),
         "Table": DenseRelation(table, 1),
     }
-    return compiler.execute(prog.forward.root, env).data
+    return jit_execute(prog.forward, env).data
 
 
 def _fwd(table, ids):
@@ -70,7 +73,7 @@ def _bwd(res, g):
         f"__fwd_{consts['Ids']}": idrel,
         "__seed": DenseRelation(g, 1),
     }
-    dtable = compiler.execute(prog.grads["Table"], env)
+    dtable = jit_execute(prog.grads["Table"], env)
     dids = np.zeros(ids.shape, dtype=jax.dtypes.float0)
     return dtable.data, dids
 

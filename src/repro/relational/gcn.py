@@ -6,6 +6,10 @@ Forward: Edge ⋈ Node (gather) + Σ-by-dst (segment sum). Backward — both
 ∂/∂h (the reversed-edge convolution) and ∂/∂w (per-edge h·g dot) — is the
 RA-autodiff-generated query, compiled to gather + segment-sum. The Pallas
 segsum kernel is the TPU hot path for the Σ (see kernels/segsum).
+
+Forward and backward step through the staged engine (core/engine.py):
+the program is built once, lowered per (graph-size, feature-dim)
+signature, and reused as a jitted ``Compiled`` across training steps.
 """
 
 from __future__ import annotations
@@ -16,8 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compiler, fra
+from repro.core import fra
 from repro.core.autodiff import ra_autodiff
+from repro.core.engine import jit_execute
 from repro.core.kernels import ADD, MUL
 from repro.core.keys import L, eq_pred, identity_key, jproj
 from repro.core.relation import CooRelation, DenseRelation
@@ -47,7 +52,7 @@ def gcn_conv(h: jnp.ndarray, edge_keys: jnp.ndarray, edge_w: jnp.ndarray) -> jnp
         "Edge": CooRelation(edge_keys, edge_w, (n, n)),
         "Node": DenseRelation(h, 1),
     }
-    return compiler.execute(prog.forward.root, env).data
+    return jit_execute(prog.forward, env).data
 
 
 def _fwd(h, edge_keys, edge_w):
@@ -67,8 +72,8 @@ def _bwd(res, g):
         f"__fwd_{scans['Node']}": node,
         "__seed": DenseRelation(g, 1),
     }
-    dnode = compiler.execute(prog.grads["Node"], env)
-    dedge = compiler.execute(prog.grads["Edge"], env)
+    dnode = jit_execute(prog.grads["Node"], env)
+    dedge = jit_execute(prog.grads["Edge"], env)
     dkeys = np.zeros(edge_keys.shape, dtype=jax.dtypes.float0)
     return dnode.data, dkeys, dedge.values
 

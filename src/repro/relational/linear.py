@@ -9,6 +9,12 @@ arithmetic a hand-written backward would emit — the relational machinery
 adds zero runtime cost — while the gradient really is the compiled output
 of Algorithm 2. Multi-block variants (for the paper's distributed-blocked
 benchmarks) are in ``rel_matmul`` with an explicit grid.
+
+Execution goes through the staged engine (core/engine.py): programs are
+constructed once, lowered per shape signature, and stepped through jitted
+``Compiled`` executables — repeated training steps never re-walk the FRA
+graph (the old module-local ``functools.cache`` + eager
+``compiler.execute`` pattern walked it on every call).
 """
 
 from __future__ import annotations
@@ -18,8 +24,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import compiler, fra
+from repro.core import fra
 from repro.core.autodiff import ra_autodiff
+from repro.core.engine import jit_execute
 from repro.core.kernels import ADD, MATMUL
 from repro.core.keys import L, R, eq_pred, jproj, project_key
 from repro.core.relation import DenseRelation
@@ -68,7 +75,7 @@ def _run_grad(prog, scans, env_arrays, seed_rel, arity):
     )
     env["__seed"] = seed_rel
     return {
-        name: compiler.execute(root, env)
+        name: jit_execute(root, env)
         for name, root in prog.grads.items()
     }
 
@@ -78,7 +85,7 @@ def rel_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """(m, k) @ (k, n) through the relational engine (arity-0 blocking)."""
     prog, _ = _linear_prog()
     env = {"X": DenseRelation(x, 0), "W": DenseRelation(w, 0)}
-    return compiler.execute(prog.forward.root, env).data
+    return jit_execute(prog.forward, env).data
 
 
 def _mm_fwd(x, w):
@@ -115,7 +122,7 @@ def rel_matmul_blocked(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """
     prog, _ = _blocked_prog()
     env = {"X": DenseRelation(x, 2), "W": DenseRelation(w, 2)}
-    return compiler.execute(prog.forward.root, env).data
+    return jit_execute(prog.forward, env).data
 
 
 def _bmm_fwd(x, w):

@@ -3,13 +3,21 @@
 ``make_train_step(model)`` returns a pure (params, opt_state, batch) →
 (params, opt_state, metrics) function. Gradients flow through the
 relational custom_vjp ops, i.e. the backward pass executes the
-RA-autodiff-generated queries.
+RA-autodiff-generated queries — which themselves step through the staged
+engine (core/engine.py), so the FRA graphs are lowered once and reused
+across steps.
+
+The step itself is staged the same way: constructed once, jit-compiled
+once (donating the parameter and optimizer buffers so XLA updates them
+in place), and optionally sharded over a mesh — the planner-style
+PartitionSpec assignment from launch/sharding.py is applied as sharding
+constraints inside the compiled step.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +40,43 @@ def make_train_step(
     lr: float = 3e-4,
     aux_weight: float = 0.01,
     grad_clip: float = 1.0,
+    jit: bool = True,
+    donate: bool = False,
+    mesh=None,
 ) -> Callable:
+    """Build the train step once; the returned callable is the compiled
+    executable reused every iteration.
+
+    ``jit=False`` returns the eager step (debugging). ``donate=True``
+    donates the params/opt_state buffers to the compiled step — use it
+    when the caller rebinds both from the step's outputs (donation under
+    an *outer* jit wrapper is ignored by JAX, so legacy callers that
+    re-wrap the step in jax.jit are unaffected).
+    ``mesh`` applies the distribution planner's parameter layout
+    (launch/sharding.py) inside the compiled step via sharding
+    constraints, so XLA SPMD places each matmul's collective.
+    """
     cfg = model.cfg
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+
+        from repro.launch.sharding import param_pspecs
+
+        def constrain(params):
+            # FSDP needs a "data" axis; a model-only mesh still gets the
+            # tensor-parallel rules.
+            specs = param_pspecs(params, mesh, fsdp="data" in mesh.axis_names)
+            return jax.tree_util.tree_map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, s)
+                ),
+                params,
+                specs,
+            )
+    else:
+        def constrain(params):
+            return params
 
     def loss_fn(params, batch):
         logits, aux = model.train_logits(params, batch)
@@ -42,6 +85,7 @@ def make_train_step(
         return total, {"loss": loss, "aux": aux}
 
     def train_step(params, opt_state, batch):
+        params = constrain(params)
         (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch
         )
@@ -49,10 +93,14 @@ def make_train_step(
             params, grads, opt_state,
             lr=lr, grad_clip=grad_clip,
         )
+        params = constrain(params)
         metrics = dict(metrics, total=total)
         return params, opt_state, metrics
 
-    return train_step
+    if not jit:
+        return train_step
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(train_step, donate_argnums=donate_argnums)
 
 
 def init_train_state(model, key, dtype=None) -> TrainState:

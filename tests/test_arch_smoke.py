@@ -29,7 +29,7 @@ def test_train_step(arch):
     rng = np.random.default_rng(0)
     batch = batch_for(cfg, B, S, rng)
     state = init_train_state(model, jax.random.PRNGKey(0))
-    step = jax.jit(make_train_step(model))
+    step = make_train_step(model)
     params, opt_state, metrics = step(state.params, state.opt_state, batch)
     assert np.isfinite(float(metrics["loss"])), arch
     # one more step must also be finite and change the loss

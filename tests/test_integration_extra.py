@@ -19,6 +19,9 @@ from repro.models import build_model
 from repro.train import make_train_step
 from repro.train.trainer import init_train_state
 
+# whole-stack integration runs: CI's default lane skips these (-m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def test_sql_query_through_planner():
     """The paper's matmul SQL goes through the distribution planner: big
@@ -66,7 +69,7 @@ def test_remat_policy_dots_neutral_on_values():
     for policy in ("nothing", "dots"):
         model = build_model(replace(cfg, remat=True, remat_policy=policy))
         state = init_train_state(model, jax.random.PRNGKey(8))
-        step = jax.jit(make_train_step(model))
+        step = make_train_step(model)
         _, _, m = step(state.params, state.opt_state, batch)
         losses.append(float(m["loss"]))
     assert losses[0] == pytest.approx(losses[1], rel=1e-6)

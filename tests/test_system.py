@@ -25,6 +25,9 @@ from repro.relational import gcn_conv, rel_linear, rel_matmul
 from repro.train import make_train_step
 from repro.train.trainer import init_train_state
 
+# end-to-end training loops: CI's default lane skips these (-m "not slow")
+pytestmark = pytest.mark.slow
+
 
 # ---------------------------------------------------------------------------
 # Logistic regression (paper §2.3 running example), trained end-to-end with
@@ -182,7 +185,7 @@ def test_lm_trainer_loss_decreases():
     rng = np.random.default_rng(3)
     batch = batch_for(cfg, 2, 16, rng)
     state = init_train_state(model, jax.random.PRNGKey(5))
-    step = jax.jit(make_train_step(model, lr=1e-3))
+    step = make_train_step(model, lr=1e-3)
     params, opt_state = state.params, state.opt_state
     losses = []
     for _ in range(8):
@@ -203,7 +206,7 @@ def test_checkpoint_roundtrip(tmp_path):
     rng = np.random.default_rng(4)
     batch = batch_for(cfg, 2, 16, rng)
     state = init_train_state(model, jax.random.PRNGKey(6))
-    step = jax.jit(make_train_step(model))
+    step = make_train_step(model)
 
     params, opt_state, _ = step(state.params, state.opt_state, batch)
     path = save_checkpoint(str(tmp_path), 1, params, opt_state)
