@@ -6,6 +6,8 @@
   kge              Figure 3 — TransE/TransR 100-iteration time
   rjp_ablation     §4 — RJP optimizations on/off
   engine_overhead  staged engine: eager re-lowering vs cached Compiled
+  kernel_dispatch  dispatch tiers: jnp vs ref (vs pallas on TPU), raw
+                   kernels + compiled logreg/GCN grad steps
 
 Each suite's rows are also written to BENCH_<suite>.json.
 
@@ -18,7 +20,15 @@ from .common import ROWS, emit_header, emit_json
 
 
 def main() -> None:
-    from . import engine_overhead, gcn, kge, logreg, nnmf, rjp_ablation
+    from . import (
+        engine_overhead,
+        gcn,
+        kernel_dispatch,
+        kge,
+        logreg,
+        nnmf,
+        rjp_ablation,
+    )
 
     suites = {
         "logreg": logreg.run,
@@ -27,6 +37,7 @@ def main() -> None:
         "kge": kge.run,
         "rjp_ablation": rjp_ablation.run,
         "engine_overhead": engine_overhead.run,
+        "kernel_dispatch": kernel_dispatch.run,
     }
     names = sys.argv[1:] or list(suites)
     unknown = [n for n in names if n not in suites]

@@ -69,6 +69,14 @@ def main() -> None:
     for nid, plan in compiled.plans.items():
         print(f"join #{nid}: {plan.kind}  costs={ {k: f'{v:.0f}' for k, v in plan.costs.items()} }")
 
+    # Kernel dispatch (docs/kernels.md): each hot op was resolved against
+    # the registry at lowering time — pallas on TPU, the jnp lowering by
+    # default on CPU; pass dispatch="ref"/"interpret" to engine.lower to
+    # route through the kernel packages' CPU tiers instead.
+    print(f"\n=== kernel dispatch ({compiled.dispatch.describe()}) ===")
+    for site, tier in sorted(compiled.resolutions.items()):
+        print(f"{site}  ->  {tier}")
+
     print("\n=== training (gradient = compiled gradient query) ===")
     for i in range(50):
         loss, grads = compiled(env)

@@ -17,6 +17,15 @@ Everything here traces under ``jax.jit``; the paper's "database query
 optimizer distributes the computation" role is then played by the sharding
 planner (planner.py) + the XLA SPMD partitioner.
 
+The two hardware hot-spots — the Σ over a CooRelation and the
+matmul-shaped Σ∘⋈ einsum — are not called directly: each lowering site is
+resolved against the kernel dispatch registry (kernels.py), which routes
+it to the Pallas TPU kernels (kernels/segsum, kernels/matmul), their
+interpret/ref CPU tiers, or the default jnp path, according to the
+``DispatchTable`` the engine threads through ``_execute_graph``. Resolved
+tiers are recorded into the caller's ``resolutions`` dict (the engine
+exposes them on ``Compiled.resolutions``).
+
 Dense gradients of *absent* tuples: a relational gradient relation simply
 lacks tuples that received no contribution; a dense array cannot express
 absence, so the compiled gradient stores explicit zeros there. Under the
@@ -25,13 +34,14 @@ additive aggregation semantics this is exact.
 
 from __future__ import annotations
 
+import math
 import string
 from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from . import fra
+from . import fra, kernels
 from .kernels import BinKernel
 from .keys import In, JoinPred, JoinProj, KeyFn, L, Lit, R, join_equiv_classes
 from .relation import CooRelation, DenseRelation
@@ -86,11 +96,116 @@ def _norm_pairs(pred: JoinPred):
 # ---------------------------------------------------------------------------
 
 
+def _note(resolutions: Optional[Dict], op: str, site: str, impl) -> None:
+    """Record a dispatch decision for diagnostics (Compiled.resolutions).
+    Distinct sites that share a shape signature get ordinal suffixes
+    (``op[site]#2`` …) so the record counts every decision, not every
+    distinct shape."""
+    if resolutions is None:
+        return
+    key = f"{op}[{site}]"
+    if key in resolutions:
+        i = 2
+        while f"{key}#{i}" in resolutions:
+            i += 1
+        key = f"{key}#{i}"
+    resolutions[key] = impl.tier
+
+
+def _dispatched_matmul_join(
+    lspec: str,
+    rspec: str,
+    ospec: str,
+    kernel: BinKernel,
+    lrel: DenseRelation,
+    rrel: DenseRelation,
+    dispatch,
+    resolutions: Optional[Dict],
+) -> Optional[DenseRelation]:
+    """Route a matmul-shaped Σ∘⋈ einsum through the ``blocked_matmul``
+    dispatch op: contractions expressible as ONE 2-D matmul after
+    flattening block axes — the MatMul chunk kernel ('mk','kn'→'mn') or a
+    chunkless elementwise ⊗ — with every contracted block class shared by
+    both sides and no batch class. Returns None to fall back to
+    ``jnp.einsum`` (including when the table resolves this site to the
+    jnp tier, which *is* the einsum path)."""
+    if kernel.chunk_spec is not None:
+        if kernel.chunk_spec != ("mk", "kn", "mn"):
+            return None
+        chunked = True
+    elif kernel.elementwise and lrel.chunk_rank == 0 and rrel.chunk_rank == 0:
+        chunked = False
+    else:
+        return None
+    sl, sr, so = set(lspec), set(rspec), set(ospec)
+    if len(sl) != len(lspec) or len(sr) != len(rspec) or len(so) != len(ospec):
+        return None                  # repeated block class within one spec
+    con = [c for c in lspec if c in sr and c not in so]
+    if not con and not chunked:
+        return None                  # outer product: nothing to win
+    if (sl & sr) - set(con):
+        return None                  # batch class (in both inputs + output)
+    if (sl - set(con)) - so or (sr - set(con)) - so or so - (sl | sr):
+        return None                  # unilateral sum / phantom output class
+
+    l_keep = [c for c in lspec if c in so]
+    r_keep = [c for c in rspec if c in so]
+    la, ra = len(lspec), len(rspec)
+    lext = {c: lrel.data.shape[lspec.index(c)] for c in lspec}
+    rext = {c: rrel.data.shape[rspec.index(c)] for c in rspec}
+
+    m, kk, n = (
+        (lrel.data.shape[la], lrel.data.shape[la + 1], rrel.data.shape[ra + 1])
+        if chunked
+        else (1, 1, 1)
+    )
+    rows = math.prod(lext[c] for c in l_keep) * m
+    inner = math.prod(lext[c] for c in con) * kk
+    cols = math.prod(rext[c] for c in r_keep) * n
+
+    ct = jnp.result_type(lrel.data, rrel.data)
+    info = {"m": rows, "k": inner, "n": cols, "dtype": ct}
+    impl = kernels.resolve_impl("blocked_matmul", info, dispatch)
+    _note(resolutions, "blocked_matmul", f"m={rows},k={inner},n={cols}", impl)
+    if impl.tier == "jnp":
+        return None                  # the einsum below IS the jnp tier
+
+    lk_ax = [lspec.index(c) for c in l_keep]
+    lc_ax = [lspec.index(c) for c in con]
+    rk_ax = [rspec.index(c) for c in r_keep]
+    rc_ax = [rspec.index(c) for c in con]
+    if chunked:
+        lperm = lk_ax + [la] + lc_ax + [la + 1]      # (keep.., m, con.., k)
+        rperm = rc_ax + [ra] + rk_ax + [ra + 1]      # (con.., k, keep.., n)
+    else:
+        lperm = lk_ax + lc_ax
+        rperm = rc_ax + rk_ax
+    l2 = jnp.transpose(lrel.data.astype(ct), lperm).reshape(rows, inner)
+    r2 = jnp.transpose(rrel.data.astype(ct), rperm).reshape(inner, cols)
+    out2 = impl.fn(l2, r2)
+
+    shp = tuple(lext[c] for c in l_keep) + ((m,) if chunked else ())
+    shp += tuple(rext[c] for c in r_keep) + ((n,) if chunked else ())
+    out = out2.reshape(shp)
+    # natural axis order: l_keep.., [m], r_keep.., [n] → ospec order + chunks
+    ax_of = {c: i for i, c in enumerate(l_keep)}
+    off = len(l_keep) + (1 if chunked else 0)
+    for j, c in enumerate(r_keep):
+        ax_of[c] = off + j
+    perm = [ax_of[c] for c in ospec]
+    if chunked:
+        perm += [len(l_keep), off + len(r_keep)]
+    out = jnp.transpose(out, perm)
+    return DenseRelation(out, key_arity=len(ospec))
+
+
 def _einsum_join(
     join: fra.Join,
     grp: Optional[KeyFn],
     lrel: DenseRelation,
     rrel: DenseRelation,
+    dispatch=None,
+    resolutions: Optional[Dict] = None,
 ) -> DenseRelation:
     la, ra = join.left.key_arity, join.right.key_arity
     uf = join_equiv_classes(join.pred, la, ra)
@@ -143,6 +258,12 @@ def _einsum_join(
         rc = oc[cr - rrel.chunk_rank:]
     else:
         raise LoweringError(f"kernel {k.name} is not einsum-lowerable")
+
+    routed = _dispatched_matmul_join(
+        lspec, rspec, ospec, k, lrel, rrel, dispatch, resolutions
+    )
+    if routed is not None:
+        return routed
 
     spec = f"{lspec}{lc},{rspec}{rc}->{ospec}{oc}"
     data = jnp.einsum(spec, lrel.data, rrel.data)
@@ -368,6 +489,8 @@ def _execute_graph(
     cache: Optional[Env] = None,
     *,
     fuse_join_agg: bool = True,
+    dispatch=None,
+    resolutions: Optional[Dict] = None,
 ) -> AnyRel:
     """Walk a query graph over chunked relations, lowering each node to XLA
     ops. This is the engine's *lowering primitive*: it runs once per trace
@@ -377,7 +500,12 @@ def _execute_graph(
     ``fuse_join_agg=False`` materializes every Join's output individually
     instead of fusing Σ∘⋈ into one einsum — needed when a gradient program
     built *without* the §4 join-agg-fusion optimization will consume the
-    join intermediates (benchmarks/rjp_ablation.py)."""
+    join intermediates (benchmarks/rjp_ablation.py).
+
+    ``dispatch`` is a kernels.DispatchTable (None → backend default)
+    steering the segment-sum / blocked-matmul hot-spots to a physical
+    tier; ``resolutions`` (optional dict) collects ``op[site] → tier``
+    records of every dispatch decision made during the walk."""
     memo: Dict[int, AnyRel] = {}
 
     def ex(n: fra.Node) -> AnyRel:
@@ -402,7 +530,9 @@ def _execute_graph(
         k = n.kernel
         if k.elementwise or k.chunk_spec is not None:
             try:
-                return _einsum_join(n, grp, lrel, rrel)
+                return _einsum_join(
+                    n, grp, lrel, rrel, dispatch=dispatch, resolutions=resolutions
+                )
             except LoweringError:
                 pass
         al = _aligned_join(n, lrel, rrel)
@@ -446,12 +576,22 @@ def _execute_graph(
         for i in reversed(range(len(keep))):
             flat = flat + rel.keys[:, keep[i]].astype(jnp.int32) * stride
             stride *= extents[i]
-        num = 1
-        for e in extents:
-            num *= e
-        summed = jax.ops.segment_sum(rel.values, flat, num_segments=num)
+        num = math.prod(extents)
+        chunk = rel.chunk_shape
+        d = math.prod(chunk)
+        info = {
+            "nnz": rel.nnz, "dim": d, "num_segments": num,
+            "dtype": rel.values.dtype,
+        }
+        impl = kernels.resolve_impl("segment_sum", info, dispatch)
+        _note(resolutions, "segment_sum", f"E={rel.nnz},D={d},S={num}", impl)
+        if impl.tier == "jnp":
+            summed = jax.ops.segment_sum(rel.values, flat, num_segments=num)
+        else:
+            msg = rel.values.reshape((rel.nnz, d))
+            summed = impl.fn(msg, flat, num)          # (num, d)
         return DenseRelation(
-            summed.reshape(extents + rel.chunk_shape), key_arity=len(extents)
+            summed.reshape(extents + chunk), key_arity=len(extents)
         )
 
     def _ex(n: fra.Node) -> AnyRel:
@@ -547,20 +687,30 @@ def execute(
     cache: Optional[Env] = None,
     *,
     fuse_join_agg: bool = True,
+    dispatch=None,
 ) -> AnyRel:
     """Eager execution: the engine's eager mode on an anonymous graph —
     re-walks the graph on every call, no engine registered (callers often
     build throwaway graphs; interning them would only pin memory). Use
-    ``RAEngine(...).lower(env).compile(...)`` for the cached jit path."""
-    return _execute_graph(root, env, cache, fuse_join_agg=fuse_join_agg)
+    ``RAEngine(...).lower(env).compile(...)`` for the cached jit path.
+
+    ``dispatch`` accepts anything ``kernels.make_table`` does (a tier
+    name, a {op: tier} dict, a DispatchTable); None keeps the backend
+    default (jnp lowerings on CPU, Pallas kernels on TPU)."""
+    table = kernels.make_table(dispatch)
+    return _execute_graph(
+        root, env, cache, fuse_join_agg=fuse_join_agg, dispatch=table
+    )
 
 
-def run_query(q: fra.Query, env: Env) -> AnyRel:
-    return _execute_graph(q.root, env)
+def run_query(q: fra.Query, env: Env, *, dispatch=None) -> AnyRel:
+    """Eager execution of a whole Query (see ``execute``)."""
+    table = kernels.make_table(dispatch)
+    return _execute_graph(q.root, env, dispatch=table)
 
 
 def execute_with_cache(
-    root: fra.Node, env: Env, *, fuse_join_agg: bool = True
+    root: fra.Node, env: Env, *, fuse_join_agg: bool = True, dispatch=None
 ) -> Tuple[AnyRel, Env]:
     """Forward pass caching every evaluated node's chunked relation, for the
     compiled gradient path (Algorithm 2 line 6). Joins consumed by a fusing
@@ -570,7 +720,10 @@ def execute_with_cache(
     program was built without join-agg fusion and needs the join
     intermediates."""
     fwd: Env = {}
-    out = _execute_graph(root, env, cache=fwd, fuse_join_agg=fuse_join_agg)
+    table = kernels.make_table(dispatch)
+    out = _execute_graph(
+        root, env, cache=fwd, fuse_join_agg=fuse_join_agg, dispatch=table
+    )
     return out, fwd
 
 
@@ -580,11 +733,17 @@ def grad_eval(
     seed: Optional[AnyRel] = None,
     *,
     fuse_join_agg: bool = True,
+    dispatch=None,
 ) -> Tuple[AnyRel, Dict[str, AnyRel]]:
     """Execute a GradientProgram (autodiff.py) on the compiled path:
     chunked forward with cache, then each gradient query graph. Thin
     wrapper over the engine's eager mode; the staged equivalent is
-    ``RAEngine(prog).lower(env).compile(...)``."""
+    ``RAEngine(prog).lower(env).compile(...)``. ``dispatch`` steers the
+    kernel tier of both the forward and every gradient graph, so the
+    gradient queries differentiate *through* whatever physical forward
+    (Pallas included) the table selects."""
     from .engine import engine_for
 
-    return engine_for(prog, fuse_join_agg=fuse_join_agg).eager(env, seed)
+    return engine_for(prog, fuse_join_agg=fuse_join_agg).eager(
+        env, seed, dispatch=dispatch
+    )

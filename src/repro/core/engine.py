@@ -10,12 +10,19 @@ module is that pipeline, staged explicitly in the jax.stages idiom
     RAEngine(program)             # FRA query / gradient program (wrapped)
         .lower(env)               # → Lowered: abstract-shape trace of the
                                   #   chunked lowering, cached per
-                                  #   (graph, shapes/dtypes) signature
+                                  #   (graph, shapes/dtypes, dispatch
+                                  #   table) signature
         .compile(mesh=...)        # → Compiled: planner.plan_query picks a
                                   #   JoinPlan per join, its PartitionSpecs
                                   #   become jax.jit in_shardings, XLA SPMD
                                   #   inserts the plan's collectives
     compiled(env)                 # jit-cached step: zero re-lowering
+
+Kernel dispatch is part of the lowering: ``lower(env, dispatch=...)``
+pins a kernels.DispatchTable (Pallas / interpret / ref / jnp tier per hot
+op) into the lowering signature, so switching tiers re-lowers and jits a
+distinct step — kernel choice can never alias a stale jit cache entry.
+The decisions actually taken are recorded on ``Compiled.resolutions``.
 
 ``RAEngine.trace_count`` counts actual FRA-graph walks (lowerings). A
 ``Compiled`` step re-walks the graph only when jit retraces — i.e. never,
@@ -33,6 +40,7 @@ oracle cross-checks.
 
 from __future__ import annotations
 
+import functools
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple, Union
 
@@ -40,7 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from . import fra, planner
+from . import fra, kernels, planner
 from .autodiff import GradientProgram
 from .relation import CooRelation, DenseRelation
 
@@ -101,7 +109,16 @@ def _abstract(rel):
 class Compiled:
     """A jit-compiled, plan-annotated executable for one environment
     signature. Calling it with a same-signature environment hits the jit
-    cache: the FRA graph is never re-walked."""
+    cache: the FRA graph is never re-walked.
+
+    Cache-key semantics: a Compiled is cached on its parent ``Lowered``
+    under ``(mesh, axis, donate, mem_budget, n_devices)``; the Lowered
+    itself is cached on the engine under ``(env signature, dispatch
+    table)``. Everything that changes the traced computation — shapes,
+    dtypes, relation layouts, kernel tiers — is therefore part of some
+    cache key, and a Compiled can only ever be replayed on environments
+    whose signature matches the one it was lowered for (``__call__``
+    re-checks and raises otherwise)."""
 
     def __init__(
         self,
@@ -120,6 +137,18 @@ class Compiled:
         #: planner-emitted PartitionSpec per base relation (pre-padding).
         self.input_specs = input_specs
         self.mesh = mesh
+
+    @property
+    def dispatch(self) -> kernels.DispatchTable:
+        """The kernel DispatchTable this executable was lowered under."""
+        return self.lowered.dispatch
+
+    @property
+    def resolutions(self) -> Dict[str, str]:
+        """``op[site] → tier`` record of every kernel-dispatch decision
+        taken while lowering (e.g. ``segment_sum[E=320000,D=32,S=20000]``
+        → ``'pallas'``)."""
+        return dict(self.lowered.resolutions)
 
     def __call__(self, env: Env, seed: Optional[AnyRel] = None):
         sig = env_signature(env, seed)
@@ -157,27 +186,40 @@ class Compiled:
 
 class Lowered:
     """Abstract-shape lowering of an engine's program for one environment
-    signature. ``compile`` attaches a physical plan + jit."""
+    signature and one kernel DispatchTable. ``compile`` attaches a
+    physical plan + jit.
+
+    Cache-key semantics: the engine caches Lowereds under ``(sig,
+    dispatch)`` where ``sig`` is ``env_signature(env, seed)`` — relation
+    structure, key arities, shapes, dtypes — and ``dispatch`` is the
+    (hashable) DispatchTable. Two environments with equal signatures share
+    a Lowered; a different tier table never does."""
 
     def __init__(
         self,
         engine: "RAEngine",
         sig: Tuple,
+        dispatch: kernels.DispatchTable,
         abstract_env: Env,
         abstract_seed,
         out_shape,
+        resolutions: Dict[str, str],
     ):
         self.engine = engine
         self.sig = sig
+        #: the kernel tier table this lowering resolved against.
+        self.dispatch = dispatch
         self.abstract_env = abstract_env
         self.abstract_seed = abstract_seed
         #: pytree of ShapeDtypeStruct-leaved relations: the program output.
         self.out_shape = out_shape
+        #: op[site] → tier decisions recorded during the lowering walk.
+        self.resolutions = resolutions
         self._compiled: Dict[Tuple, Compiled] = {}
 
     def eager(self, env: Env, seed: Optional[AnyRel] = None):
         """Un-jitted execution (re-walks the graph; debugging only)."""
-        return self.engine._execute(env, seed)
+        return self.engine._execute(env, seed, dispatch=self.dispatch)
 
     def compile(
         self,
@@ -219,11 +261,12 @@ class Lowered:
 
         # --- jit: plans become in_shardings, XLA inserts the collectives -
         engine = self.engine
+        table = self.dispatch
 
         def step(donated_env: Env, kept_env: Env, seed):
             env = dict(kept_env)
             env.update(donated_env)
-            return engine._execute(env, seed)
+            return engine._execute(env, seed, dispatch=table)
 
         jit_kwargs: Dict[str, Any] = {"donate_argnums": (0,)} if donate else {}
         if mesh is not None:
@@ -304,7 +347,13 @@ class RAEngine:
         )
 
     # -- execution body (runs eagerly or under trace) ----------------------
-    def _execute(self, env: Env, seed: Optional[AnyRel] = None):
+    def _execute(
+        self,
+        env: Env,
+        seed: Optional[AnyRel] = None,
+        dispatch: Optional[kernels.DispatchTable] = None,
+        resolutions: Optional[Dict[str, str]] = None,
+    ):
         from . import compiler
 
         self.trace_count += 1
@@ -312,7 +361,11 @@ class RAEngine:
             if seed is not None:
                 raise ValueError("seed is only meaningful for GradientPrograms")
             return compiler._execute_graph(
-                self.program.root, env, fuse_join_agg=self.fuse_join_agg
+                self.program.root,
+                env,
+                fuse_join_agg=self.fuse_join_agg,
+                dispatch=dispatch,
+                resolutions=resolutions,
             )
 
         prog = self.program
@@ -322,6 +375,8 @@ class RAEngine:
             env,
             cache=fwd_cache,
             fuse_join_agg=self.fuse_join_agg,
+            dispatch=dispatch,
+            resolutions=resolutions,
         )
         if seed is None:
             if not (isinstance(out, DenseRelation) and out.key_arity == 0):
@@ -334,29 +389,51 @@ class RAEngine:
         # forward was executed (matches the historical grad_eval contract;
         # rjp_ablation relies on it).
         grads = {
-            name: compiler._execute_graph(rootn, genv)
+            name: compiler._execute_graph(
+                rootn, genv, dispatch=dispatch, resolutions=resolutions
+            )
             for name, rootn in prog.grads.items()
         }
         return out, grads
 
     # -- the staged pipeline ----------------------------------------------
-    def eager(self, env: Env, seed: Optional[AnyRel] = None):
-        """Un-staged execution: walk the graph now, every call."""
-        return self._execute(env, seed)
+    def eager(
+        self, env: Env, seed: Optional[AnyRel] = None, *, dispatch=None
+    ):
+        """Un-staged execution: walk the graph now, every call.
+        ``dispatch`` takes anything ``kernels.make_table`` accepts."""
+        table = kernels.make_table(dispatch)
+        return self._execute(env, seed, dispatch=table)
 
-    def lower(self, env: Env, seed: Optional[AnyRel] = None) -> Lowered:
-        """Trace the chunked lowering at ``env``'s shapes. Cached: a second
-        call with an identical signature returns the same Lowered without
-        re-walking the graph."""
+    def lower(
+        self, env: Env, seed: Optional[AnyRel] = None, *, dispatch=None
+    ) -> Lowered:
+        """Trace the chunked lowering at ``env``'s shapes under a kernel
+        DispatchTable (``dispatch`` accepts anything ``kernels.make_table``
+        does; None → backend default). Cached: a second call with an
+        identical (signature, table) pair returns the same Lowered without
+        re-walking the graph; switching tiers is a cache miss and
+        re-lowers."""
+        table = kernels.make_table(dispatch)
         sig = env_signature(env, seed)
-        hit = self._lowered.get(sig)
+        key = (sig, table)
+        hit = self._lowered.get(key)
         if hit is not None:
             return hit
         abstract_env = {k: _abstract(v) for k, v in env.items()}
         abstract_seed = None if seed is None else _abstract(seed)
-        out_shape = jax.eval_shape(self._execute, abstract_env, abstract_seed)
-        low = Lowered(self, sig, abstract_env, abstract_seed, out_shape)
-        self._lowered[sig] = low
+        resolutions: Dict[str, str] = {}
+        out_shape = jax.eval_shape(
+            functools.partial(
+                self._execute, dispatch=table, resolutions=resolutions
+            ),
+            abstract_env,
+            abstract_seed,
+        )
+        low = Lowered(
+            self, sig, table, abstract_env, abstract_seed, out_shape, resolutions
+        )
+        self._lowered[key] = low
         return low
 
 
@@ -392,10 +469,15 @@ def jit_execute(
     mesh=None,
     donate: Tuple[str, ...] = (),
     fuse_join_agg: bool = True,
+    dispatch=None,
 ):
     """lower → plan → compile → run in one call, with every stage cached:
-    per-program engine, per-signature Lowered, per-mesh Compiled. This is
-    the staged hot path the relational operator layer steps through."""
+    per-program engine, per-(signature, dispatch-table) Lowered, per-mesh
+    Compiled. This is the staged hot path the relational operator layer
+    steps through. ``dispatch`` steers the kernel tier (see
+    ``kernels.make_table``)."""
     eng = engine_for(program, fuse_join_agg=fuse_join_agg)
-    compiled = eng.lower(env, seed).compile(mesh=mesh, donate=donate)
+    compiled = eng.lower(env, seed, dispatch=dispatch).compile(
+        mesh=mesh, donate=donate
+    )
     return compiled(env, seed)

@@ -1,4 +1,6 @@
-"""Kernel functions for the functional RA, with derivative registry.
+"""Kernel functions for the functional RA, with derivative registry, plus
+the physical-kernel **dispatch registry** the chunked compiler routes hot
+operators through.
 
 The paper parameterizes RA operations with scalar kernel functions and, in
 the chunked "tensor-relational" extension (Appendix A), with tensor kernels
@@ -16,12 +18,20 @@ the compiler can pattern-match (e.g. ⊗ ∈ {mul, matmul} + ⊕ = add → einsu
 Per Appendix A, derivatives of *chunk* kernels may be produced by
 conventional auto-diff (JAX) — that is where ``jax.grad``/``jax.vjp`` is
 allowed; the relational layer above never calls it.
+
+Separately from the *logical* kernels above, this module owns the
+**dispatch registry** (``register_impl`` / ``resolve_impl`` /
+``DispatchTable``): the mapping from the compiler's hot logical ops
+(``segment_sum`` — the Σ over a CooRelation; ``blocked_matmul`` — the
+matmul-shaped Σ∘⋈ einsum) to physical implementations, tiered per backend
+(``pallas`` on TPU, ``interpret``/``ref`` on CPU, ``jnp`` as the default).
+See docs/kernels.md for the authoring guide and the registry contract.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -221,3 +231,256 @@ def scale_kernel(c: float) -> UnaryKernel:
             f"scale[{key}]", lambda x, _c=key: _c * x, vjp=lambda g, x, _c=key: _c * g
         )
     return SCALE[key]
+
+
+# ---------------------------------------------------------------------------
+# Kernel dispatch registry: (logical op, backend, predicate) → implementation
+#
+# The chunked compiler (compiler.py) has two hardware hot-spots:
+#
+#   segment_sum     Σ over a CooRelation — fn(msg2d, seg, num_segments),
+#                   msg2d: (E, D) float, seg: (E,) int32 (out-of-range ids
+#                   are dropped), returns (num_segments, D).
+#   blocked_matmul  the matmul-shaped Σ∘⋈ einsum — fn(x2d, y2d) → x @ y.
+#
+# Instead of calling jax.ops.segment_sum / jnp.einsum directly, the
+# compiler resolves each site against this registry at lowering time. A
+# resolved choice is pinned by the DispatchTable the engine carries, so
+# kernel selection is part of the lowering signature and hence of the jit
+# cache key (core/engine.py). Tiers, from most to least specialized:
+#
+#   pallas     the hand-tiled TPU kernels (kernels/segsum, kernels/matmul)
+#   interpret  the same Pallas kernels in interpreter mode — CPU
+#              correctness tier for kernel logic, slow by construction
+#   ref        the kernels' pure-jnp oracles (kernels/*/ref.py)
+#   jnp        the compiler's original jnp lowering (einsum / segment_sum);
+#              always registered, always applicable — the default tier
+# ---------------------------------------------------------------------------
+
+#: logical ops the compiler routes through the registry.
+DISPATCH_OPS: Tuple[str, ...] = ("segment_sum", "blocked_matmul")
+
+#: known tiers, in decreasing specialization order.
+DISPATCH_TIERS: Tuple[str, ...] = ("pallas", "interpret", "ref", "jnp")
+
+
+class KernelDispatchError(LookupError):
+    """No registered implementation matched (op, backend, predicate)."""
+
+
+@dataclass(frozen=True)
+class KernelImpl:
+    """One registry entry.
+
+    ``predicate(info)`` sees a dict of shape/dtype facts for the call site
+    (segment_sum: nnz/dim/num_segments/dtype; blocked_matmul: m/k/n/dtype)
+    and must be a pure function of it — resolution happens at lowering
+    time and is replayed on retrace, so a flappy predicate would desync
+    the lowering from its cache key.
+    """
+
+    op: str
+    tier: str
+    fn: Callable
+    backends: Tuple[str, ...] = ()   # () = any jax platform
+    priority: int = 0                # higher wins within a tier
+    predicate: Optional[Callable] = None
+
+    def __repr__(self) -> str:
+        plats = ",".join(self.backends) or "any"
+        return f"<{self.op}:{self.tier}@{plats}>"
+
+
+_IMPLS: Dict[Tuple[str, str], List[KernelImpl]] = {}
+
+
+def register_impl(
+    op: str,
+    tier: str,
+    fn: Callable,
+    *,
+    backends: Tuple[str, ...] = (),
+    priority: int = 0,
+    predicate: Optional[Callable] = None,
+) -> KernelImpl:
+    """Register a physical implementation for a logical op under a tier.
+
+    Entries within one (op, tier) bucket are tried in decreasing
+    ``priority``; the first whose backend list admits the current platform
+    and whose predicate accepts the site's shape/dtype info wins.
+    """
+    if tier not in DISPATCH_TIERS:
+        raise ValueError(f"unknown tier {tier!r}; have {DISPATCH_TIERS}")
+    impl = KernelImpl(op, tier, fn, tuple(backends), priority, predicate)
+    bucket = _IMPLS.setdefault((op, tier), [])
+    bucket.append(impl)
+    bucket.sort(key=lambda i: -i.priority)
+    return impl
+
+
+@dataclass(frozen=True)
+class DispatchTable:
+    """Immutable (hashable) tier preference per logical op, pinned to one
+    backend. This is the object the engine folds into the lowering
+    signature: two tables that differ in any op's tier order produce
+    distinct ``Lowered`` objects and therefore distinct jitted steps."""
+
+    backend: str
+    entries: Tuple[Tuple[str, Tuple[str, ...]], ...]  # sorted by op name
+
+    def tiers(self, op: str) -> Tuple[str, ...]:
+        for name, tiers in self.entries:
+            if name == op:
+                return tiers
+        return ("jnp",)
+
+    def describe(self) -> str:
+        body = ", ".join(
+            f"{op}→{'>'.join(tiers)}" for op, tiers in self.entries
+        )
+        return f"[{self.backend}] {body}"
+
+
+def default_table(backend: Optional[str] = None) -> DispatchTable:
+    """The default tier order for a backend: Pallas kernels (predicate-
+    gated, jnp fallback) on TPU; the plain jnp lowerings elsewhere —
+    CPU keeps its historical behaviour unless a tier is forced."""
+    backend = backend or jax.default_backend()
+    tiers = ("pallas", "jnp") if backend == "tpu" else ("jnp",)
+    return DispatchTable(
+        backend, tuple((op, tiers) for op in sorted(DISPATCH_OPS))
+    )
+
+
+def make_table(spec=None, backend: Optional[str] = None) -> DispatchTable:
+    """Normalize a dispatch request into a DispatchTable.
+
+    ``spec`` may be: None / ``"auto"`` (backend default), an existing
+    DispatchTable, a tier name applied to every op (``"ref"``), a tuple of
+    tier names tried in order, or a dict ``{op: tier | (tiers...)}`` —
+    unmentioned ops keep their default tiers.
+    """
+    requested = backend
+    backend = backend or jax.default_backend()
+    if isinstance(spec, DispatchTable):
+        if requested is not None and spec.backend != requested:
+            raise ValueError(
+                f"DispatchTable is pinned to backend {spec.backend!r} and "
+                f"cannot be reinterpreted for {requested!r}; rebuild it "
+                "with make_table(<tier spec>, backend=...)"
+            )
+        return spec
+    if spec is None or spec == "auto":
+        return default_table(backend)
+
+    def norm(tiers) -> Tuple[str, ...]:
+        if isinstance(tiers, str):
+            tiers = (tiers,)
+        tiers = tuple(tiers)
+        bad = [t for t in tiers if t not in DISPATCH_TIERS]
+        if bad:
+            raise ValueError(f"unknown tier(s) {bad}; have {DISPATCH_TIERS}")
+        return tiers
+
+    if isinstance(spec, (str, tuple, list)):
+        tiers = norm(spec)
+        return DispatchTable(
+            backend, tuple((op, tiers) for op in sorted(DISPATCH_OPS))
+        )
+    if isinstance(spec, dict):
+        unknown = set(spec) - set(DISPATCH_OPS)
+        if unknown:
+            raise ValueError(f"unknown op(s) {sorted(unknown)}; have {DISPATCH_OPS}")
+        base = dict(default_table(backend).entries)
+        base.update({op: norm(t) for op, t in spec.items()})
+        return DispatchTable(backend, tuple(sorted(base.items())))
+    raise TypeError(f"cannot build a DispatchTable from {type(spec)}")
+
+
+def resolve_impl(op: str, info: Dict, table: Optional[DispatchTable] = None) -> KernelImpl:
+    """Walk the table's tier order for ``op`` and return the first
+    implementation whose backend and predicate admit this site."""
+    table = table or default_table()
+    for tier in table.tiers(op):
+        for impl in _IMPLS.get((op, tier), ()):
+            if impl.backends and table.backend not in impl.backends:
+                continue
+            if impl.predicate is not None and not impl.predicate(info):
+                continue
+            return impl
+    raise KernelDispatchError(
+        f"no implementation of {op!r} for backend {table.backend!r} under "
+        f"tiers {table.tiers(op)} with site info {info}"
+    )
+
+
+# -- registered implementations ---------------------------------------------
+# The pallas/interpret/ref fns import the kernel packages lazily so that
+# importing repro.core stays cheap on machines that never leave the jnp
+# tier.
+
+
+def _is_float(info: Dict) -> bool:
+    return jnp.issubdtype(jnp.dtype(info["dtype"]), jnp.floating)
+
+
+def _segsum_jnp(msg, seg, num_segments):
+    return jax.ops.segment_sum(msg, seg, num_segments=num_segments)
+
+
+def _segsum_ref(msg, seg, num_segments):
+    from repro.kernels.segsum.ref import segment_sum_ref
+
+    return segment_sum_ref(msg, seg, num_segments)
+
+
+def _segsum_pallas(msg, seg, num_segments):
+    from repro.kernels.segsum.ops import segment_sum
+
+    return segment_sum(msg, seg, num_segments, interpret=False)
+
+
+def _segsum_interpret(msg, seg, num_segments):
+    from repro.kernels.segsum.ops import segment_sum
+
+    return segment_sum(msg, seg, num_segments, interpret=True)
+
+
+def _matmul_jnp(x, y):
+    return jnp.matmul(x, y)
+
+
+def _matmul_ref(x, y):
+    from repro.kernels.matmul.ref import matmul_ref
+
+    return matmul_ref(x, y)
+
+
+def _matmul_pallas(x, y):
+    from repro.kernels.matmul.ops import blocked_matmul
+
+    return blocked_matmul(x, y, interpret=False)
+
+
+def _matmul_interpret(x, y):
+    from repro.kernels.matmul.ops import blocked_matmul
+
+    return blocked_matmul(x, y, interpret=True)
+
+
+# The hardware tiers require float inputs (the Pallas kernels accumulate in
+# f32 and store the input dtype); the ref oracles accept anything their jnp
+# twins accept; the jnp tier is the unconditional fallback.
+register_impl(
+    "segment_sum", "pallas", _segsum_pallas, backends=("tpu",), predicate=_is_float
+)
+register_impl("segment_sum", "interpret", _segsum_interpret, predicate=_is_float)
+register_impl("segment_sum", "ref", _segsum_ref)
+register_impl("segment_sum", "jnp", _segsum_jnp)
+
+register_impl(
+    "blocked_matmul", "pallas", _matmul_pallas, backends=("tpu",), predicate=_is_float
+)
+register_impl("blocked_matmul", "interpret", _matmul_interpret, predicate=_is_float)
+register_impl("blocked_matmul", "ref", _matmul_ref)
+register_impl("blocked_matmul", "jnp", _matmul_jnp)

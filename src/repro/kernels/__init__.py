@@ -12,6 +12,14 @@ to two kernels:
               on random-access memory writes the TPU does not have.
 
 Each kernel package has: <name>.py (pl.pallas_call + BlockSpec),
-ops.py (jit'd public wrapper with interpret fallback), ref.py (pure-jnp
-oracle used by tests).
+ops.py (jit'd public wrapper with interpret fallback and a custom VJP so
+reverse-mode AD differentiates through the Pallas forward), ref.py
+(pure-jnp oracle used by tests and served as the ``ref`` dispatch tier).
+
+matmul and segsum are wired into the engine through the kernel dispatch
+registry in core/kernels.py: the chunked compiler resolves its
+segment-sum and matmul-shaped join-aggregate lowerings against the
+registry, which routes them here on TPU (and, when forced, to the
+interpret/ref tiers on CPU). See docs/kernels.md for the registry
+contract and the authoring walkthrough.
 """

@@ -1,10 +1,16 @@
-"""Public wrapper for the blocked-matmul kernel.
+"""Public wrapper for the blocked-matmul kernel: the ``pallas``/
+``interpret`` tiers of the engine's ``blocked_matmul`` dispatch op
+(core/kernels.py).
 
-Pads inputs up to tile multiples, dispatches to the Pallas kernel on TPU
-and to interpret mode elsewhere (this container is CPU-only; TPU is the
-deployment target). ``use_pallas=False`` falls back to the jnp oracle —
-that is what the chunked compiler uses under jit on CPU, keeping the
-kernel on the hot path only where it wins.
+``blocked_matmul(x, y)`` pads both operands up to tile multiples and runs
+the MXU-tiled kernel (matmul.py); ``use_pallas=False`` short-circuits to
+the jnp oracle (ref.py). ``interpret=None`` auto-selects interpreter mode
+off-TPU (this container is CPU-only; TPU is the deployment target).
+
+The wrapper carries a ``jax.custom_vjp`` so reverse-mode AD differentiates
+*through* the Pallas forward, and — matching the paper's Fig. 4 optimized
+RJP kernels — the backward is two more blocked matmuls on the same tier:
+``dX = g @ Yᵀ`` and ``dY = Xᵀ @ g``.
 """
 
 from __future__ import annotations
@@ -27,6 +33,36 @@ def _pad_to(x: jnp.ndarray, m: int, axis: int) -> jnp.ndarray:
     return jnp.pad(x, pad)
 
 
+def _run(x, y, bm, bn, bk, interpret, use_pallas):
+    if not use_pallas:
+        return matmul_ref(x, y)
+    m, n = x.shape[0], y.shape[1]
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y, bk, 0), bn, 1)
+    out = matmul_pallas(xp, yp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _blocked_matmul(x, y, bm, bn, bk, interpret, use_pallas):
+    return _run(x, y, bm, bn, bk, interpret, use_pallas)
+
+
+def _fwd(x, y, bm, bn, bk, interpret, use_pallas):
+    return _run(x, y, bm, bn, bk, interpret, use_pallas), (x, y)
+
+
+def _bwd(bm, bn, bk, interpret, use_pallas, res, g):
+    x, y = res
+    # Fig. 4 RJP kernels, routed through the same tier as the forward.
+    dx = _run(g, y.T, bm, bn, bk, interpret, use_pallas)
+    dy = _run(x.T, g, bm, bn, bk, interpret, use_pallas)
+    return dx.astype(x.dtype), dy.astype(y.dtype)
+
+
+_blocked_matmul.defvjp(_fwd, _bwd)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "use_pallas")
 )
@@ -40,13 +76,10 @@ def blocked_matmul(
     interpret: bool | None = None,
     use_pallas: bool = True,
 ) -> jnp.ndarray:
-    """x @ y via the MXU-tiled Pallas kernel, padding to tile multiples."""
-    if not use_pallas:
-        return matmul_ref(x, y)
+    """``x @ y`` via the MXU-tiled Pallas kernel, padding to tile
+    multiples. ``bm``/``bn``/``bk`` are the output-row/output-col/
+    contraction tile sizes. Differentiable (custom VJP: two blocked
+    matmuls on the same tier)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    m, n = x.shape[0], y.shape[1]
-    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
-    yp = _pad_to(_pad_to(y, bk, 0), bn, 1)
-    out = matmul_pallas(xp, yp, bm=bm, bn=bn, bk=bk, interpret=interpret)
-    return out[:m, :n]
+    return _blocked_matmul(x, y, bm, bn, bk, interpret, use_pallas)

@@ -50,7 +50,19 @@ def ssm_scan(
     interpret: bool = False,
     use_pallas: bool = True,
 ) -> jnp.ndarray:
-    """h with h_t = a_t ⊙ h_{t-1} + b_t over axis 1. a, b: (B, S, C, N)."""
+    """Selective scan ``h_t = a_t ⊙ h_{t-1} + b_t`` over axis 1.
+
+    ``a``, ``b``: (B, S, C, N) — batch, sequence, channels, state.
+    ``bt``/``bc`` are the time/channel tile sizes (shrunk to divisors for
+    ragged smoke-test shapes); ``use_pallas=False`` falls back to the
+    associative-scan oracle (ref.py). Differentiable: the custom VJP runs
+    a time-reversed scan of the same kernel (see module docstring), so
+    training keeps the single-pass HBM profile in both directions.
+
+    Unlike segsum/matmul this kernel is not a compiler lowering target —
+    the models layer (models/ssm.py) calls it directly — so it has no
+    entry in the core/kernels.py dispatch registry.
+    """
     return _run(a, b, bt=bt, bc=bc, interpret=interpret, use_pallas=use_pallas)
 
 

@@ -1,0 +1,104 @@
+"""Docs lane: run every docs/*.md as a doctest file and verify that the
+cross-references they make — dotted ``repro.*`` module paths, backticked
+file paths, relative markdown links — still resolve, so a moved module
+fails CI instead of silently rotting the docs.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py [docs/*.md ...]
+"""
+
+from __future__ import annotations
+
+import doctest
+import importlib
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+
+#: dotted module/attribute references, e.g. ``repro.core.kernels.make_table``
+_DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+#: backticked path-looking references, e.g. `core/engine.py`, `docs/kernels.md`
+_BACKTICK_PATH = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.(?:py|md|json))`")
+#: relative markdown links: [text](kernels.md) / [text](../README.md)
+_MD_LINK = re.compile(r"\]\((?!https?://|#)([^)#\s]+)\)")
+
+#: roots a backticked path may be relative to.
+_PATH_ROOTS = (REPO, REPO / "src" / "repro", REPO / "src", DOCS)
+
+
+def _check_dotted(ref: str) -> bool:
+    """Import the longest importable prefix, then getattr the rest."""
+    parts = ref.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def _check_path(ref: str) -> bool:
+    return any((root / ref).exists() for root in _PATH_ROOTS)
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    text = path.read_text()
+
+    # -- doctest the fenced examples -------------------------------------
+    results = doctest.testfile(
+        str(path),
+        module_relative=False,
+        optionflags=doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE,
+        verbose=False,
+    )
+    if results.failed:
+        errors.append(
+            f"{path.name}: {results.failed}/{results.attempted} doctests failed"
+        )
+
+    # -- cross-references -------------------------------------------------
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for ref in _DOTTED.findall(line):
+            if not _check_dotted(ref):
+                errors.append(
+                    f"{path.name}:{lineno}: broken module reference {ref!r}"
+                )
+        for ref in _BACKTICK_PATH.findall(line):
+            if not _check_path(ref):
+                errors.append(
+                    f"{path.name}:{lineno}: broken path reference {ref!r}"
+                )
+        for ref in _MD_LINK.findall(line):
+            if not (path.parent / ref).exists() and not _check_path(ref):
+                errors.append(f"{path.name}:{lineno}: broken link {ref!r}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [pathlib.Path(a) for a in argv] or sorted(DOCS.glob("*.md"))
+    if not files:
+        print("check_docs: no docs/*.md files found", file=sys.stderr)
+        return 1
+    failed = False
+    for f in files:
+        errs = check_file(f)
+        if errs:
+            failed = True
+            for e in errs:
+                print(f"FAIL {e}", file=sys.stderr)
+        else:
+            print(f"ok   {f.relative_to(REPO) if f.is_absolute() else f}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
