@@ -15,7 +15,9 @@ ops over chunked relations:
 
 Everything here traces under ``jax.jit``; the paper's "database query
 optimizer distributes the computation" role is then played by the sharding
-planner (planner.py) + the XLA SPMD partitioner.
+planner (planner.py — 2-D (data × model) plans on a launch/mesh mesh) +
+the XLA SPMD partitioner, which inserts the chosen plan's model-axis
+psum and data-axis batch collectives around the lowerings emitted here.
 
 The two hardware hot-spots — the Σ over a CooRelation and the
 matmul-shaped Σ∘⋈ einsum — are not called directly: each lowering site is

@@ -13,9 +13,11 @@ module is that pipeline, staged explicitly in the jax.stages idiom
                                   #   (graph, shapes/dtypes, dispatch
                                   #   table) signature
         .compile(mesh=...)        # → Compiled: planner.plan_query picks a
-                                  #   JoinPlan per join, its PartitionSpecs
-                                  #   become jax.jit in_shardings, XLA SPMD
-                                  #   inserts the plan's collectives
+                                  #   JoinPlan per join — 2-D (data ×
+                                  #   model) on a launch/mesh mesh — its
+                                  #   PartitionSpecs become jax.jit
+                                  #   in_shardings, XLA SPMD inserts the
+                                  #   plan's collectives
     compiled(env)                 # jit-cached step: zero re-lowering
 
 Kernel dispatch is part of the lowering: ``lower(env, dispatch=...)``
@@ -40,6 +42,9 @@ oracle cross-checks.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import dataclasses
 import functools
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple, Union
@@ -112,13 +117,14 @@ class Compiled:
     cache: the FRA graph is never re-walked.
 
     Cache-key semantics: a Compiled is cached on its parent ``Lowered``
-    under ``(mesh, axis, donate, mem_budget, n_devices)``; the Lowered
-    itself is cached on the engine under ``(env signature, dispatch
-    table)``. Everything that changes the traced computation — shapes,
-    dtypes, relation layouts, kernel tiers — is therefore part of some
-    cache key, and a Compiled can only ever be replayed on environments
-    whose signature matches the one it was lowered for (``__call__``
-    re-checks and raises otherwise)."""
+    under ``(mesh, axis, donate, mem_budget, n_devices, geometry)`` where
+    ``geometry`` is the planner's ``MeshGeometry`` read off the mesh; the
+    Lowered itself is cached on the engine under ``(env signature,
+    dispatch table)``. Everything that changes the traced computation —
+    shapes, dtypes, relation layouts, kernel tiers, mesh shape — is
+    therefore part of some cache key, and a Compiled can only ever be
+    replayed on environments whose signature matches the one it was
+    lowered for (``__call__`` re-checks and raises otherwise)."""
 
     def __init__(
         self,
@@ -128,6 +134,8 @@ class Compiled:
         plans: Dict[int, planner.JoinPlan],
         input_specs: Dict[str, P],
         mesh,
+        geometry: Optional[planner.MeshGeometry] = None,
+        in_shardings: Optional[Tuple[Dict, Dict]] = None,
     ):
         self.lowered = lowered
         self._jitted = jitted
@@ -137,6 +145,11 @@ class Compiled:
         #: planner-emitted PartitionSpec per base relation (pre-padding).
         self.input_specs = input_specs
         self.mesh = mesh
+        #: the (data × model) MeshGeometry this executable was planned for.
+        self.geometry = geometry
+        #: (donated, kept) relation-shaped sharding pytrees when a mesh
+        #: was given; __call__ reshards inputs to the planned layout.
+        self.in_shardings = in_shardings
 
     @property
     def dispatch(self) -> kernels.DispatchTable:
@@ -150,6 +163,43 @@ class Compiled:
         → ``'pallas'``)."""
         return dict(self.lowered.resolutions)
 
+    @property
+    def placements(self) -> Dict[str, Dict[str, Optional[int]]]:
+        """``relation → {"data": dim, "model": dim}`` record of the 2-D
+        placement of every base relation: which block axis carries the
+        mesh's (folded) data axes and which carries the model axis
+        (``None`` = replicated on that mesh axis). The distribution
+        analogue of ``resolutions``. Compiled against a mesh, this reads
+        the *effective* in_shardings (after non-divisible axes were
+        dropped and COO relations replicated); without a mesh it reports
+        the planner's intent from ``input_specs``."""
+        geo = self.geometry
+        model_axis = geo.model_axis if geo is not None else "model"
+        data_axes = set(geo.data_axes) if geo is not None else set()
+
+        def dims_of(spec) -> Dict[str, Optional[int]]:
+            data_dim = model_dim = None
+            for d, entry in enumerate(tuple(spec)):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                if any(a in data_axes for a in axes):
+                    data_dim = d
+                if model_axis in axes:
+                    model_dim = d
+            return {"data": data_dim, "model": model_dim}
+
+        if self.in_shardings is None:
+            return {n: dims_of(s) for n, s in self.input_specs.items()}
+        out: Dict[str, Dict[str, Optional[int]]] = {}
+        for shards in self.in_shardings:
+            for name, rel in shards.items():
+                if isinstance(rel, DenseRelation):
+                    out[name] = dims_of(rel.data.spec)
+                else:  # CooRelation: kept replicated
+                    out[name] = {"data": None, "model": None}
+        return out
+
     def __call__(self, env: Env, seed: Optional[AnyRel] = None):
         sig = env_signature(env, seed)
         if sig != self.lowered.sig:
@@ -160,6 +210,15 @@ class Compiled:
             )
         donated = {k: env[k] for k in self.donate_names}
         kept = {k: v for k, v in env.items() if k not in self.donate_names}
+        if self.in_shardings is not None:
+            # Reshard to the planned layout: inputs produced by an earlier
+            # step may be committed to a different placement (e.g. a
+            # gradient seed laid out by the forward's compiled output);
+            # device_put inserts the re-blocking collective and is a
+            # no-op when the layout already matches.
+            sh_don, sh_kept = self.in_shardings
+            donated = jax.device_put(donated, sh_don)
+            kept = jax.device_put(kept, sh_kept)
         return self._jitted(donated, kept, seed)
 
     def lower_text(self, *, compiled: bool = True) -> str:
@@ -225,39 +284,55 @@ class Lowered:
         self,
         mesh=None,
         *,
-        axis: str = "model",
+        axis: Optional[str] = None,
         donate: Tuple[str, ...] = (),
         mem_budget: float = planner.DEFAULT_MEM_BUDGET,
         n_devices: Optional[int] = None,
     ) -> Compiled:
         """plan_query → in_shardings → jax.jit.
 
-        ``mesh``: a jax Mesh whose ``axis`` carries the model-parallel
-        dimension; None compiles for the default (single-device) placement
-        but still runs the planner (the plans are inspectable either way).
+        ``mesh``: a jax Mesh — ``launch/mesh.make_host_mesh`` and
+        ``make_production_mesh`` are the canonical constructors. The
+        planner reads the real (data × model) geometry off it
+        (``planner.MeshGeometry.from_mesh``): a 1-axis mesh reproduces
+        the historical 1-D model-axis plans, a 2-D mesh adds per-relation
+        batch-dim sharding over the (folded) data axes. None compiles for
+        the default (single-device) placement but still runs the planner
+        (the plans are inspectable either way).
+        ``axis`` overrides the name of the model axis (default: the
+        mesh's ``"model"`` axis, or its sole axis).
         ``donate`` names env entries whose buffers jit may reuse
         (parameters / optimizer state on the training hot path).
         """
         donate = tuple(sorted(donate))
-        key = (mesh, axis, donate, mem_budget, n_devices)
+        geo = (
+            planner.MeshGeometry.from_mesh(mesh, axis=axis)
+            if mesh is not None
+            else None
+        )
+        if n_devices is None:
+            n_devices = geo.model_size if geo is not None else jax.device_count()
+        elif geo is not None and n_devices != geo.model_size:
+            # an explicit n_devices overrides the mesh-derived model-axis
+            # size in the cost model (legacy contract)
+            geo = dataclasses.replace(geo, model_size=n_devices)
+        key = (mesh, axis, donate, mem_budget, n_devices, geo)
         hit = self._compiled.get(key)
         if hit is not None:
             return hit
-
-        if n_devices is None:
-            if mesh is not None and axis in mesh.shape:
-                n_devices = int(mesh.shape[axis])
-            else:
-                n_devices = jax.device_count()
 
         # --- plan: the distribution planner picks a JoinPlan per join ----
         # (planner._rel_bytes reads sizes off relations whose payloads are
         # ShapeDtypeStructs, so the abstract env is a valid stats source)
         fwd_query = self.engine.forward_query
         plans = planner.plan_query(
-            fwd_query, self.abstract_env, n_devices, mem_budget=mem_budget
+            fwd_query,
+            self.abstract_env,
+            n_devices,
+            mem_budget=mem_budget,
+            geometry=geo,
         )
-        input_specs = planner.input_pspecs(fwd_query, plans, axis=axis)
+        input_specs = planner.input_pspecs(fwd_query, plans)
 
         # --- jit: plans become in_shardings, XLA inserts the collectives -
         engine = self.engine
@@ -269,17 +344,19 @@ class Lowered:
             return engine._execute(env, seed, dispatch=table)
 
         jit_kwargs: Dict[str, Any] = {"donate_argnums": (0,)} if donate else {}
+        shardings = None
         if mesh is not None:
             sh_don = {
-                k: self._rel_sharding(self.abstract_env[k], input_specs.get(k), mesh, axis)
+                k: self._rel_sharding(self.abstract_env[k], input_specs.get(k), mesh)
                 for k in donate
             }
             sh_kept = {
-                k: self._rel_sharding(rel, input_specs.get(k), mesh, axis)
+                k: self._rel_sharding(rel, input_specs.get(k), mesh)
                 for k, rel in self.abstract_env.items()
                 if k not in donate
             }
             jit_kwargs["in_shardings"] = (sh_don, sh_kept, None)
+            shardings = (sh_don, sh_kept)
 
         compiled = Compiled(
             self,
@@ -288,25 +365,35 @@ class Lowered:
             plans,
             input_specs,
             mesh,
+            geo,
+            shardings,
         )
         self._compiled[key] = compiled
         return compiled
 
     @staticmethod
-    def _rel_sharding(rel: AnyRel, spec: Optional[P], mesh, axis: str):
+    def _rel_sharding(rel: AnyRel, spec: Optional[P], mesh):
         """Relation-shaped sharding pytree: the planner's block-axis spec,
-        padded over chunk axes and dropped on non-divisible extents; COO
-        relations are kept replicated (their key/value rows have no block
-        axes to co-partition statically)."""
+        padded over chunk axes and dropped on non-divisible extents; a
+        2-D plan's folded data-axis tuples (("pod", "data")) divide by
+        the axes' product. COO relations are kept replicated (their
+        key/value rows have no block axes to co-partition statically)."""
         if isinstance(rel, CooRelation):
             rep = NamedSharding(mesh, P())
             return CooRelation(rep, rep, rel.extents)
+        sizes = dict(mesh.shape)
         full = [None] * len(rel.data.shape)
         if spec is not None:
             for d, ax in enumerate(tuple(spec)):
                 if ax is None or d >= rel.key_arity:
                     continue
-                if rel.data.shape[d] % int(mesh.shape[ax]) == 0:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                if any(a not in sizes for a in axes):
+                    continue
+                total = 1
+                for a in axes:
+                    total *= int(sizes[a])
+                if rel.data.shape[d] % total == 0:
                     full[d] = ax
         return DenseRelation(NamedSharding(mesh, P(*full)), rel.key_arity)
 
@@ -444,6 +531,44 @@ class RAEngine:
 _ENGINES: "OrderedDict[Tuple[int, bool], RAEngine]" = OrderedDict()
 _MAX_ENGINES = 256
 
+#: ambient-mesh stack; a ContextVar so concurrent threads / tasks (e.g. a
+#: serving worker pool) each see only their own use_mesh nesting.
+_MESH_STACK: "contextvars.ContextVar[Tuple[Any, ...]]" = contextvars.ContextVar(
+    "repro_engine_mesh_stack", default=()
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Make ``mesh`` the default mesh of every ``jit_execute`` call in the
+    block — the canonical way to run the relational operator layer
+    (``rel_matmul``, ``gcn_conv``, ``rel_embed``) distributed, since the
+    ``custom_vjp`` wrappers expose no mesh argument of their own.
+
+    ``mesh`` is a jax Mesh or a ``launch/mesh.resolve_mesh`` spec string
+    (``"host"``, ``"host:<model>"``, ``"production"``,
+    ``"production:multipod"``), so ``launch/mesh.make_host_mesh`` /
+    ``make_production_mesh`` are the entry points either way::
+
+        with use_mesh("host:2"):
+            y = rel_matmul(x, w)      # planned + sharded on the host mesh
+    """
+    if isinstance(mesh, str):
+        from repro.launch.mesh import resolve_mesh
+
+        mesh = resolve_mesh(mesh)
+    token = _MESH_STACK.set(_MESH_STACK.get() + (mesh,))
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.reset(token)
+
+
+def default_mesh():
+    """The innermost ``use_mesh`` mesh, or None."""
+    stack = _MESH_STACK.get()
+    return stack[-1] if stack else None
+
 
 def engine_for(program: Program, *, fuse_join_agg: bool = True) -> RAEngine:
     """Engine per (program identity, fuse flag), LRU-bounded. The engine
@@ -475,7 +600,19 @@ def jit_execute(
     per-program engine, per-(signature, dispatch-table) Lowered, per-mesh
     Compiled. This is the staged hot path the relational operator layer
     steps through. ``dispatch`` steers the kernel tier (see
-    ``kernels.make_table``)."""
+    ``kernels.make_table``); ``mesh=None`` picks up the ambient
+    ``use_mesh`` mesh, so the wrappers distribute without new arguments.
+    The ambient mesh only applies at top level: under an active trace
+    (an outer jit / grad) the planner's in_shardings would fight the
+    shardings already carried by the traced operands, so sharding is
+    left to propagate from them instead."""
+    if mesh is None:
+        try:
+            trace_clean = jax.core.trace_state_clean()
+        except AttributeError:  # no trace-state probe on this jax:
+            trace_clean = False  # be safe, skip the ambient mesh
+        if trace_clean:
+            mesh = default_mesh()
     eng = engine_for(program, fuse_join_agg=fuse_join_agg)
     compiled = eng.lower(env, seed, dispatch=dispatch).compile(
         mesh=mesh, donate=donate

@@ -13,6 +13,16 @@ and the mesh, between the paper's two physical plans:
     sharded on the contraction block axis; the join-aggregate's Σ then
     requires an all-reduce (psum) of the output.
 
+On a 2-D (data × model) mesh — ``launch/mesh.make_host_mesh`` /
+``make_production_mesh`` — the planner additionally chooses, per
+relation, a *data-axis batch dimension*: the surviving non-contraction
+block axis of (usually) the batch-keyed relation is sharded over the
+mesh's batch axes (``("pod", "data")`` folded on the multi-pod mesh),
+the other side is replicated over them, and the Σ of the join-aggregate
+pays a data-axis all-reduce whenever the grouping drops the batch key.
+Both placements use the same bytes-moved cost model; a 1-axis mesh
+degrades to exactly the historical 1-D plans.
+
 The decision is made statically (relation chunk-grid shapes are static at
 trace time) with the same bytes-moved cost model a database optimizer
 uses, and is *executed* by emitting PartitionSpecs for the relations'
@@ -29,8 +39,76 @@ from typing import Dict, List, Optional, Tuple
 from jax.sharding import PartitionSpec as P
 
 from . import fra
-from .keys import L, R, join_equiv_classes
+from .keys import In, L, R, join_equiv_classes
 from .relation import CooRelation, DenseRelation
+
+#: mesh axes treated as data-parallel (batch) axes, in fold order — the
+#: multi-pod production mesh folds ("pod", "data") onto one relation dim.
+DATA_AXIS_NAMES = ("pod", "data")
+
+
+def fold_axes(axes: Tuple[str, ...]):
+    """PartitionSpec entry for a dim carrying ``axes``: the folded tuple,
+    a single axis name, or None — the one place the fold rule lives."""
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+@dataclass(frozen=True)
+class MeshGeometry:
+    """Static description of the mesh the planner plans for: one
+    tensor-parallel (model) axis plus zero or more folded data axes.
+
+    ``from_mesh`` derives it from a real ``jax.sharding.Mesh``;
+    ``single`` is the legacy 1-D geometry (model axis only) used when the
+    caller only knows a device count."""
+
+    model_axis: str
+    model_size: int
+    data_axes: Tuple[str, ...] = ()
+    data_size: int = 1
+
+    @classmethod
+    def single(cls, n_devices: int, axis: str = "model") -> "MeshGeometry":
+        return cls(axis, max(1, int(n_devices or 1)))
+
+    @classmethod
+    def from_mesh(cls, mesh, axis: Optional[str] = None) -> "MeshGeometry":
+        """Read the (data × model) geometry off a jax Mesh: ``axis`` (or
+        ``"model"``) is the tensor-parallel axis — on a 1-axis mesh the
+        sole axis plays that role, reproducing the 1-D plans — and every
+        ``DATA_AXIS_NAMES`` axis present is folded into the batch pair."""
+        names = tuple(mesh.axis_names)
+        sizes = dict(mesh.shape)
+        if axis is not None:
+            if axis not in names:
+                raise ValueError(
+                    f"model axis {axis!r} is not on the mesh (axes: {names})"
+                )
+            model = axis
+        elif "model" in names:
+            model = "model"
+        elif len(names) == 1:
+            model = names[0]
+        else:
+            raise ValueError(
+                f"cannot infer the model axis of a multi-axis mesh with no "
+                f"'model' axis (axes: {names}); pass axis= explicitly"
+            )
+        data_axes = tuple(
+            a for a in DATA_AXIS_NAMES if a in names and a != model
+        )
+        data_size = 1
+        for a in data_axes:
+            data_size *= int(sizes[a])
+        return cls(model, int(sizes[model]), data_axes, data_size)
+
+    @property
+    def data_spec(self):
+        """PartitionSpec entry for a data-sharded dim: the folded axis
+        tuple, or the single axis name."""
+        return fold_axes(self.data_axes)
 
 
 @dataclass(frozen=True)
@@ -39,21 +117,37 @@ class JoinPlan:
 
     kind: str                      # broadcast_left | broadcast_right | copartition
     node_id: int
-    # estimated bytes moved per device for each candidate (the cost table)
+    # estimated bytes moved per device for each candidate (the cost table;
+    # 2-D plans add the data-axis candidates under "data:*" keys)
     costs: Dict[str, float]
-    # block-axis index carrying the mesh axis, per side (None = replicated)
+    # block-axis index carrying the model axis, per side (None = replicated)
     left_shard_dim: Optional[int]
     right_shard_dim: Optional[int]
-    # does the plan end in an all-reduce of the join-agg output?
+    # does the plan end in a model-axis all-reduce of the join-agg output?
     needs_psum: bool
+    # block-axis index carrying the data (batch) axes, per side
+    left_batch_dim: Optional[int] = None
+    right_batch_dim: Optional[int] = None
+    # the mesh axes the dims above refer to
+    model_axis: str = "model"
+    data_axes: Tuple[str, ...] = ()
+    # chosen data-axis placement: none | data:shard_left | data:shard_right
+    #                             | data:replicate
+    data_kind: str = "none"
+    # does the Σ reduce the data-sharded batch key (data-axis all-reduce)?
+    needs_data_psum: bool = False
 
-    def pspec(self, side: str, arity: int, axis: str = "model") -> P:
+    def pspec(self, side: str, arity: int, axis: Optional[str] = None) -> P:
         dim = self.left_shard_dim if side == "left" else self.right_shard_dim
-        spec = [None] * arity
+        bdim = (
+            self.left_batch_dim if side == "left" else self.right_batch_dim
+        )
+        spec: list = [None] * arity
         if dim is not None and dim < arity:
-            spec[dim] = axis
+            spec[dim] = axis or self.model_axis
+        if bdim is not None and bdim < arity and self.data_axes:
+            spec[bdim] = fold_axes(self.data_axes)
         return P(*spec)
-
 
 def _rel_bytes(rel) -> float:
     if isinstance(rel, DenseRelation):
@@ -87,7 +181,8 @@ def _output_dims(join: fra.Join) -> Tuple[Optional[int], Optional[int]]:
     """First *non-contraction* block dim per side that survives into the
     output (for the broadcast plans: the kept side stays sharded on a dim
     requiring no collective — sharding the contraction dim would still
-    force a psum)."""
+    force a psum). On a 2-D mesh this is also each side's candidate batch
+    dim for the data axes."""
     lc, rc = _contraction_dims(join)
     ldim = rdim = None
     for c in join.proj.comps:
@@ -108,6 +203,10 @@ def plan_join(
     out_bytes: float,
     n_devices: int,
     mem_budget: float = DEFAULT_MEM_BUDGET,
+    *,
+    geometry: Optional[MeshGeometry] = None,
+    sum_out_bytes: Optional[float] = None,
+    batch_survives: Tuple[bool, bool] = (True, True),
 ) -> JoinPlan:
     """Pick the cheapest *feasible* physical plan by bytes moved per
     device, exactly the way the paper describes the database optimizer
@@ -117,33 +216,136 @@ def plan_join(
 
     all-gather of X over N devices moves ~X·(N-1)/N per device;
     a ring all-reduce of the output moves ~2·out·(N-1)/N.
+
+    ``geometry`` extends the decision to a 2-D (data × model) mesh: the
+    data axes are placed first — shard one side's surviving batch dim
+    (replicating the other side over the data axes) or replicate both —
+    and the model axis then avoids the batch dim. ``sum_out_bytes`` is
+    the post-Σ output estimate the all-reduce costs use on the 2-D path;
+    ``batch_survives`` says, per side, whether the batch dim survives the
+    enclosing grouping (a dropped batch key costs a data-axis all-reduce
+    of the Σ output). A 1-axis geometry reproduces the historical 1-D
+    plans bit-for-bit.
     """
-    frac = (n_devices - 1) / n_devices
+    geo = geometry or MeshGeometry.single(n_devices)
+    n_model = max(1, geo.model_size)
+    frac_m = (n_model - 1) / n_model
+    two_d = geo.data_size > 1
     lc, rc = _contraction_dims(join)
     lo, ro = _output_dims(join)
 
     costs: Dict[str, float] = {}
+
+    # --- data axes: shard a batch dim, or replicate over them ------------
+    left_batch = right_batch = None
+    data_kind = "none"
+    needs_data_psum = False
+    if two_d:
+        frac_d = (geo.data_size - 1) / geo.data_size
+        sum_out = out_bytes if sum_out_bytes is None else sum_out_bytes
+        # feasibility mirrors the model axis: a candidate must fit every
+        # relation it replicates within the per-device budget
+        dcosts: Dict[str, float] = {}
+        if left_bytes <= mem_budget and right_bytes <= mem_budget:
+            # no batch parallelism: both inputs replicated over the axes
+            dcosts["data:replicate"] = (left_bytes + right_bytes) * frac_d
+        if lo is not None and right_bytes <= mem_budget:
+            dcosts["data:shard_left"] = right_bytes * frac_d + (
+                0.0 if batch_survives[0] else 2.0 * sum_out * frac_d
+            )
+        if ro is not None and left_bytes <= mem_budget:
+            dcosts["data:shard_right"] = left_bytes * frac_d + (
+                0.0 if batch_survives[1] else 2.0 * sum_out * frac_d
+            )
+        if not dcosts:
+            # nothing feasible (e.g. both sides over budget with no batch
+            # dim): best effort — shard a batch dim if one exists so at
+            # least the sharded side stays partitioned, else replicate
+            if lo is not None:
+                dcosts["data:shard_left"] = right_bytes * frac_d
+            elif ro is not None:
+                dcosts["data:shard_right"] = left_bytes * frac_d
+            else:
+                dcosts["data:replicate"] = (left_bytes + right_bytes) * frac_d
+        data_kind = min(dcosts, key=dcosts.get)
+        costs.update(dcosts)
+        if data_kind == "data:shard_left":
+            left_batch = lo
+            needs_data_psum = not batch_survives[0]
+        elif data_kind == "data:shard_right":
+            right_batch = ro
+            needs_data_psum = not batch_survives[1]
+
+    # --- model axis: broadcast vs co-partition, avoiding the batch dims --
+    # The kept side of a broadcast plan stays sharded on a surviving dim;
+    # if the data axes already took that dim, the model axis would sit
+    # idle and the "broadcast" degenerates to replicating *both* sides —
+    # charge it as such (2-D path only; 1-D keeps the historical costs).
+    lo_m = None if (lo is not None and lo == left_batch) else lo
+    ro_m = None if (ro is not None and ro == right_batch) else ro
+    mcosts: Dict[str, float] = {}
     if left_bytes <= mem_budget:
-        costs["broadcast_left"] = left_bytes * frac
+        c = left_bytes * frac_m
+        if two_d and ro_m is None:
+            c += right_bytes * frac_m
+        mcosts["broadcast_left"] = c
     if right_bytes <= mem_budget:
-        costs["broadcast_right"] = right_bytes * frac
+        c = right_bytes * frac_m
+        if two_d and lo_m is None:
+            c += left_bytes * frac_m
+        mcosts["broadcast_right"] = c
     if lc is not None and rc is not None:
         # co-partition on the contraction key: inputs land pre-sharded
         # (no repartition cost for our static plans — parameters/data are
-        # *created* in the planned layout), output needs the psum.
-        costs["copartition"] = 2.0 * out_bytes * frac
-    if not costs:
+        # *created* in the planned layout), output needs the psum. The
+        # 2-D path prices the psum at the post-Σ output size.
+        psum_out = sum_out if two_d and sum_out_bytes is not None else out_bytes
+        mcosts["copartition"] = 2.0 * psum_out * frac_m
+    if not mcosts:
         raise ValueError(
             "no feasible plan: both sides exceed the memory budget and the "
             "join has no contraction key to co-partition on"
         )
-    kind = min(costs, key=costs.get)
+    kind = min(mcosts, key=mcosts.get)
+    costs.update(mcosts)
 
+    common = dict(
+        left_batch_dim=left_batch,
+        right_batch_dim=right_batch,
+        model_axis=geo.model_axis,
+        data_axes=geo.data_axes,
+        data_kind=data_kind,
+        needs_data_psum=needs_data_psum,
+    )
     if kind == "copartition":
-        return JoinPlan(kind, join.id, costs, lc, rc, needs_psum=True)
+        return JoinPlan(kind, join.id, costs, lc, rc, needs_psum=True, **common)
     if kind == "broadcast_left":
-        return JoinPlan(kind, join.id, costs, None, ro, needs_psum=False)
-    return JoinPlan(kind, join.id, costs, lo, None, needs_psum=False)
+        return JoinPlan(kind, join.id, costs, None, ro_m, needs_psum=False, **common)
+    return JoinPlan(kind, join.id, costs, lo_m, None, needs_psum=False, **common)
+
+
+def _batch_survival(
+    join: fra.Join, agg: Optional[fra.Agg]
+) -> Tuple[bool, bool]:
+    """Does each side's batch dim survive the enclosing Σ's grouping?
+    Dropped batch keys cost a data-axis all-reduce of the Σ output."""
+    lo, ro = _output_dims(join)
+
+    def survives(comp) -> bool:
+        if comp is None or agg is None:
+            return True
+        try:
+            pos = join.proj.comps.index(comp)
+        except ValueError:
+            return True
+        return any(
+            isinstance(c, In) and c.idx == pos for c in agg.grp.comps
+        )
+
+    return (
+        survives(None if lo is None else L(lo)),
+        survives(None if ro is None else R(ro)),
+    )
 
 
 def plan_query(
@@ -151,11 +353,17 @@ def plan_query(
     env: Dict[str, object],
     n_devices: int,
     mem_budget: float = DEFAULT_MEM_BUDGET,
+    *,
+    geometry: Optional[MeshGeometry] = None,
 ) -> Dict[int, JoinPlan]:
     """Walk the query graph, estimate relation sizes bottom-up, and emit a
-    JoinPlan per Join node (keyed by node id)."""
+    JoinPlan per Join node (keyed by node id). ``geometry`` plans for a
+    2-D (data × model) mesh (see ``MeshGeometry.from_mesh``); omitted, it
+    is the legacy 1-D model-axis-only geometry over ``n_devices``."""
+    geo = geometry or MeshGeometry.single(n_devices)
     sizes: Dict[int, float] = {}
-    plans: Dict[int, JoinPlan] = {}
+    agg_of: Dict[int, fra.Agg] = {}
+    joins: List[fra.Join] = []
 
     for node in query.root.topo():
         if isinstance(node, (fra.TableScan, fra.Const)):
@@ -172,23 +380,45 @@ def plan_query(
             child = sizes[node.child.id]
             dropped = max(0, node.child.key_arity - node.key_arity)
             sizes[node.id] = child / (8.0 ** dropped)
+            if isinstance(node.child, fra.Join):
+                agg_of[node.child.id] = node
         elif isinstance(node, fra.Join):
-            lb = sizes[node.left.id]
-            rb = sizes[node.right.id]
-            ob = max(lb, rb)  # join-agg output is at most the big side
-            plans[node.id] = plan_join(node, lb, rb, ob, n_devices, mem_budget)
-            sizes[node.id] = ob
+            joins.append(node)
+            sizes[node.id] = max(
+                sizes[node.left.id], sizes[node.right.id]
+            )  # join-agg output is at most the big side
         elif isinstance(node, (fra.AddOp, fra.Restrict)):
             sizes[node.id] = sizes[node.children[0].id]
+
+    plans: Dict[int, JoinPlan] = {}
+    for node in joins:
+        lb = sizes[node.left.id]
+        rb = sizes[node.right.id]
+        ob = sizes[node.id]
+        agg = agg_of.get(node.id)
+        plans[node.id] = plan_join(
+            node,
+            lb,
+            rb,
+            ob,
+            geo.model_size,
+            mem_budget,
+            geometry=geo,
+            sum_out_bytes=sizes[agg.id] if agg is not None else None,
+            batch_survives=_batch_survival(node, agg),
+        )
     return plans
 
 
 def input_pspecs(
     query: fra.Query,
     plans: Dict[int, JoinPlan],
-    axis: str = "model",
+    axis: Optional[str] = None,
 ) -> Dict[str, P]:
-    """PartitionSpecs for the query's base relations implied by the plans.
+    """PartitionSpecs for the query's base relations implied by the plans
+    — 2-D on a (data × model) geometry: the model axis on the shard dim,
+    the (folded) data axes on the batch dim. ``axis`` overrides the model
+    axis name (legacy callers); default is each plan's own.
 
     When a relation feeds multiple joins with conflicting specs the first
     (bottom-most) join wins — XLA resharding handles the rest."""

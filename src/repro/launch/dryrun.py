@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import data_parallel_size, make_production_mesh
 from repro.launch.roofline import roofline_from_compiled
 from repro.launch.sharding import (
     batch_pspecs,
@@ -169,8 +169,9 @@ def build_step(
         fn = jax.jit(prefill_step, in_shardings=(pshard, bshard))
         return fn, (params_sds, batch_sds)
 
-    # decode
-    seq_sharded = shp.global_batch < mesh.shape["data"]
+    # decode: data-parallel ways = the full ("pod","data") fold, so the
+    # multi-pod mesh counts the pod axis toward batch parallelism too
+    seq_sharded = shp.global_batch < data_parallel_size(mesh)
     cspec = cache_pspecs(
         specs["caches"], mesh, batch=shp.global_batch, seq_sharded=seq_sharded
     )

@@ -1,4 +1,10 @@
-"""Production mesh construction.
+"""Production mesh construction — the canonical mesh entry points.
+
+``make_host_mesh`` / ``make_production_mesh`` build the (data × model)
+meshes the 2-D distribution planner (core/planner.py) reads its geometry
+from; ``resolve_mesh`` turns the spec strings accepted by
+``train.make_train_step`` / ``serving`` / ``core.engine.use_mesh`` into
+those meshes.
 
 Defined as functions (never module-level constants) so importing this
 module never touches jax device state — jax locks the device count on
@@ -10,6 +16,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.planner import DATA_AXIS_NAMES
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod (TPU v5e); multi-pod adds a leading
@@ -20,12 +28,55 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1):
-    """Small mesh over however many devices this host exposes (tests)."""
+    """Small (data × model) mesh over however many devices this host
+    exposes (tests; 8 virtual CPU devices on the tier1-spmd CI lane give
+    a 4×2 mesh at ``model=2``). With a single visible device this falls
+    back to a 1-axis mesh — the planner then reproduces its 1-D plans —
+    instead of a degenerate (1, 1) mesh."""
+    if model < 1:
+        raise ValueError(f"make_host_mesh: model={model} must be >= 1")
     n = len(jax.devices())
-    assert n % model == 0
+    if n == 1 and model == 1:
+        return jax.make_mesh((1,), ("model",))
+    if n % model != 0:
+        raise ValueError(
+            f"make_host_mesh: {n} visible device(s) not divisible by "
+            f"model={model}"
+        )
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def resolve_mesh(spec):
+    """Resolve a mesh spec to a jax Mesh: None and Mesh objects pass
+    through; the strings ``"host"``, ``"host:<model>"``, ``"production"``
+    and ``"production:multipod"`` name the standard meshes above."""
+    if spec is None or not isinstance(spec, str):
+        return spec
+    name, _, arg = spec.partition(":")
+    if name == "host":
+        return make_host_mesh(model=int(arg) if arg else 1)
+    if name == "production":
+        if arg and arg not in ("multipod", "multi_pod", "2"):
+            raise ValueError(
+                f"unknown production mesh variant {arg!r}; use "
+                "'production' or 'production:multipod'"
+            )
+        return make_production_mesh(multi_pod=bool(arg))
+    raise ValueError(
+        f"unknown mesh spec {spec!r}; use 'host[:<model>]' or "
+        "'production[:multipod]'"
+    )
+
+
 def batch_axes(mesh) -> tuple:
-    """Mesh axes used for data parallelism."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    """Mesh axes used for data parallelism — the fold the 2-D planner
+    (``core.planner.DATA_AXIS_NAMES``) puts on batch dimensions."""
+    return tuple(a for a in DATA_AXIS_NAMES if a in mesh.axis_names)
+
+
+def data_parallel_size(mesh) -> int:
+    """Total data-parallel ways: the product of the batch axes' sizes."""
+    n = 1
+    for a in batch_axes(mesh):
+        n *= int(dict(mesh.shape)[a])
+    return n

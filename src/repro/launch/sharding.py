@@ -151,9 +151,14 @@ def param_pspecs(param_shapes, mesh, *, fsdp: bool = True) -> Any:
 
 
 def batch_pspecs(batch_shapes, mesh) -> Any:
-    """Input batch: batch dimension over ("pod","data")."""
-    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    bspec = axes if len(axes) > 1 else axes[0]
+    """Input batch: batch dimension over the mesh's data axes (the same
+    ("pod","data") fold the 2-D relational planner emits — see
+    ``launch.mesh.batch_axes``)."""
+    from repro.core.planner import fold_axes
+
+    from .mesh import batch_axes
+
+    bspec = fold_axes(batch_axes(mesh))
 
     def assign(path, leaf):
         if leaf.ndim == 0:

@@ -7,7 +7,10 @@ RA-generated backward is the mirrored join: scatter-add of output
 cotangents into table rows — the classic embedding gradient, derived by
 Algorithm 2 rather than written by hand. Both directions step through the
 staged engine (core/engine.py): lowered once per (batch, vocab, dim)
-signature, jit-cached across steps.
+signature, jit-cached across steps. Under ``core.engine.use_mesh`` the
+2-D planner places the table's block axes on the ambient (data × model)
+mesh (the vocab-parallel layout of launch/sharding.py, derived from the
+plan instead of a name rule).
 """
 
 from __future__ import annotations

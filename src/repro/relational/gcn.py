@@ -10,6 +10,9 @@ segsum kernel is the TPU hot path for the Σ (see kernels/segsum).
 Forward and backward step through the staged engine (core/engine.py):
 the program is built once, lowered per (graph-size, feature-dim)
 signature, and reused as a jitted ``Compiled`` across training steps.
+Under ``core.engine.use_mesh`` the 2-D planner places the relations on
+the ambient (data × model) mesh (CooRelation edges stay replicated until
+COO nnz-sharding lands — see ROADMAP).
 """
 
 from __future__ import annotations

@@ -15,6 +15,12 @@ constructed once, lowered per shape signature, and stepped through jitted
 ``Compiled`` executables — repeated training steps never re-walk the FRA
 graph (the old module-local ``functools.cache`` + eager
 ``compiler.execute`` pattern walked it on every call).
+
+Distribution: wrap calls in ``core.engine.use_mesh`` (a launch/mesh mesh
+or spec string like ``"host:2"``) and every ``jit_execute`` below
+compiles against that mesh — the 2-D planner shards the operand block
+axes over (data × model) and XLA inserts the collectives; no extra
+arguments cross the ``custom_vjp`` boundary.
 """
 
 from __future__ import annotations

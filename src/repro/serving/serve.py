@@ -87,18 +87,62 @@ def init_cache(cfg, batch: int, cache_len: int):
     return caches
 
 
-def make_prefill_step(model: Model, cache_len: int):
+def _param_shardings(model: Model, mesh):
+    """NamedSharding tree for the model's parameters on ``mesh`` (the
+    launch/sharding.py planner layout)."""
+    from repro.launch.sharding import param_pspecs, to_shardings
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # FSDP needs a "data" axis; the 1-axis host-mesh fallback still gets
+    # the tensor-parallel rules.
+    specs = param_pspecs(params_shape, mesh, fsdp="data" in mesh.axis_names)
+    return to_shardings(specs, mesh)
+
+
+def make_prefill_step(model: Model, cache_len: int, *, mesh=None):
+    """``mesh`` (a jax Mesh or a ``launch/mesh.resolve_mesh`` spec string
+    such as ``"host"`` / ``"production"``) returns the step jitted with
+    the launch/sharding.py parameter layout — ``make_host_mesh`` /
+    ``make_production_mesh`` are the canonical constructors."""
+    from repro.launch.mesh import resolve_mesh
+
+    mesh = resolve_mesh(mesh)
+
     def prefill_step(params, batch):
         return model.prefill(params, batch, cache_len)
 
-    return prefill_step
+    if mesh is None:
+        return prefill_step
+    return jax.jit(prefill_step, in_shardings=(_param_shardings(model, mesh), None))
 
 
-def make_decode_step(model: Model):
+def make_decode_step(model: Model, *, mesh=None):
+    """See ``make_prefill_step`` for the ``mesh`` contract."""
+    from repro.launch.mesh import resolve_mesh
+
     cfg = model.cfg
+    mesh = resolve_mesh(mesh)
 
     def decode_step(params, token, caches, length, enc_out=None):
         logits, caches = model.decode_step(params, token, caches, length, enc_out)
         return logits, caches
 
-    return decode_step
+    if mesh is None:
+        return decode_step
+    # enc_out is optional, so a fixed-arity in_shardings tuple cannot be
+    # used; place the params explicitly instead — cached per params
+    # object, so the per-token hot path never re-walks the weight pytree
+    # (the cache holds the source params, pinning its identity).
+    pshard = _param_shardings(model, mesh)
+    jitted = jax.jit(decode_step)
+    placed: Dict[int, Tuple[Any, Any]] = {}
+
+    def sharded_decode(params, token, caches, length, enc_out=None):
+        hit = placed.get(id(params))
+        if hit is None or hit[0] is not params:
+            placed.clear()
+            placed[id(params)] = (params, jax.device_put(params, pshard))
+            hit = placed[id(params)]
+        return jitted(hit[1], token, caches, length, enc_out)
+
+    return sharded_decode

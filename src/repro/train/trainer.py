@@ -54,9 +54,18 @@ def make_train_step(
     re-wrap the step in jax.jit are unaffected).
     ``mesh`` applies the distribution planner's parameter layout
     (launch/sharding.py) inside the compiled step via sharding
-    constraints, so XLA SPMD places each matmul's collective.
+    constraints, so XLA SPMD places each matmul's collective. It takes a
+    jax Mesh or a ``launch/mesh.resolve_mesh`` spec string (``"host"``,
+    ``"host:<model>"``, ``"production"``, ``"production:multipod"``) —
+    ``launch.mesh.make_host_mesh`` / ``make_production_mesh`` are the
+    canonical constructors either way.
     """
     cfg = model.cfg
+
+    if isinstance(mesh, str):
+        from repro.launch.mesh import resolve_mesh
+
+        mesh = resolve_mesh(mesh)
 
     if mesh is not None:
         from jax.sharding import NamedSharding

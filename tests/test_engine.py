@@ -331,6 +331,7 @@ _SPMD_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.spmd
 def test_compiled_spmd_in_shardings():
     repo = pathlib.Path(__file__).resolve().parent.parent
     r = subprocess.run(

@@ -165,6 +165,7 @@ _SPMD_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.spmd
 def test_copartition_executes_under_spmd():
     repo = pathlib.Path(__file__).resolve().parent.parent
     r = subprocess.run(

@@ -1,0 +1,118 @@
+"""Bench-regression gate: compare freshly emitted BENCH_*.json timings
+against the committed baselines in ``benchmarks/baselines/`` and fail on
+a >2x slowdown of the compiled-step metrics.
+
+Only CPU-stable metrics are gated — the jitted *compiled* steps, whose
+wall time is dominated by the fixed XLA executable rather than Python
+lowering or allocator noise. Eager re-lowering timings, raw-kernel
+micro-benchmarks, and interpret probes vary too much across runners to
+gate on.
+
+Usage (the CI slow lane; ``BENCH_*.json`` emissions are gitignored, the
+baselines are committed):
+
+    PYTHONPATH=src python -m benchmarks.run engine_overhead kernel_dispatch
+    python tools/check_bench.py
+
+Re-baseline when a change legitimately moves a gated timing:
+
+    cp BENCH_<suite>.json benchmarks/baselines/<suite>.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+from typing import Dict, List
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+#: gated suites: fresh emission BENCH_<name>.json vs baselines/<name>.json
+SUITES = ("engine_overhead", "kernel_dispatch")
+
+#: names considered CPU-stable: compiled/jitted steps only.
+STABLE = (
+    re.compile(r"^engine_overhead/.*/compiled$"),
+    re.compile(r"^kernel_dispatch/engine-"),
+)
+
+DEFAULT_THRESHOLD = 2.0
+
+
+def _is_stable(name: str) -> bool:
+    return any(p.match(name) for p in STABLE)
+
+
+def _load(path: pathlib.Path) -> Dict[str, float]:
+    rows = json.loads(path.read_text())
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def check(
+    baseline_dir: pathlib.Path,
+    fresh_dir: pathlib.Path,
+    threshold: float = DEFAULT_THRESHOLD,
+) -> List[str]:
+    """Return a list of failure messages (empty = gate passes)."""
+    errors: List[str] = []
+    for suite in SUITES:
+        base_path = baseline_dir / f"{suite}.json"
+        fresh_path = fresh_dir / f"BENCH_{suite}.json"
+        if not base_path.exists():
+            errors.append(f"{suite}: baseline missing at {base_path}")
+            continue
+        if not fresh_path.exists():
+            errors.append(f"{suite}: fresh run missing at {fresh_path}")
+            continue
+        base = _load(base_path)
+        fresh = _load(fresh_path)
+        gated = {n for n in base if _is_stable(n)}
+        if not gated:
+            errors.append(f"{suite}: no gated (compiled-step) metrics in baseline")
+            continue
+        for name in sorted(gated):
+            if name not in fresh:
+                errors.append(f"{name}: present in baseline, missing from fresh run")
+                continue
+            ratio = fresh[name] / base[name] if base[name] > 0 else float("inf")
+            status = "FAIL" if ratio > threshold else "ok  "
+            print(
+                f"{status} {name}: {base[name]:.0f}us -> {fresh[name]:.0f}us "
+                f"({ratio:.2f}x, limit {threshold:.1f}x)"
+            )
+            if ratio > threshold:
+                errors.append(
+                    f"{name}: {ratio:.2f}x slowdown "
+                    f"({base[name]:.0f}us -> {fresh[name]:.0f}us)"
+                )
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--baseline", default=str(REPO / "benchmarks" / "baselines"),
+        help="directory holding the committed <suite>.json baselines",
+    )
+    ap.add_argument(
+        "--fresh", default=".",
+        help="directory holding the freshly emitted BENCH_<suite>.json files",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=DEFAULT_THRESHOLD,
+        help="max allowed fresh/baseline slowdown ratio (default 2.0)",
+    )
+    args = ap.parse_args(argv)
+    errors = check(
+        pathlib.Path(args.baseline), pathlib.Path(args.fresh), args.threshold
+    )
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
