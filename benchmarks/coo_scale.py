@@ -1,0 +1,148 @@
+"""COO nnz-sharding scale lane: the same GCN grad step with the edge
+relation replicated vs nnz-sharded, on the host mesh.
+
+The paper's scaling claim needs the *edge list* — the largest array in a
+graph program — distributed. This lane measures exactly that on the
+8-virtual-device CI mesh:
+
+  replicated — a 1×N (model-only) host mesh: the planner has no data
+               axes, the CooRelation is replicated on every device (the
+               pre-COO-sharding behaviour)
+  sharded    — an N×1 (data-only) host mesh: the planner places the nnz
+               rows on the data axis (``data:shard_nnz_left``) and the
+               Σ-by-dst runs as per-shard segment-sum + scatter collective
+
+Per row we record the jitted step time and, in ``derived``, the measured
+**per-device peak bytes of the edge relation** (max over devices of the
+keys+values shard bytes actually placed by the compiled in_shardings) —
+the sharded lane must show the ~N× reduction. Results are asserted to
+agree to atol 1e-5 across lanes.
+
+Runs meaningfully under the tier1-spmd lane's
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on a single
+device both lanes degenerate to the same placement and the rows say so.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fra
+from repro.core.autodiff import ra_autodiff
+from repro.core.engine import RAEngine
+from repro.core.kernels import ADD, MUL, SQUARE, SUM_CHUNK, scale_kernel
+from repro.core.keys import EMPTY_KEY, TRUE, L, eq_pred, identity_key, jproj
+from repro.core.relation import DenseRelation
+from repro.launch.mesh import make_host_mesh
+from repro.relational.gcn import partitioned_edges
+
+from .common import record, timeit
+
+ATOL = 1e-5
+
+GRAPHS = [
+    ("arxiv-mini", 2_000, 160_000, 32),
+    ("pubmed-mini", 500, 20_000, 16),
+]
+
+
+def _gcn_prog(n: int):
+    conv = fra.Agg(
+        identity_key(1), ADD,
+        fra.Join(
+            eq_pred((0, 0)), jproj(L(1)), MUL,
+            fra.scan("Edge", 2), fra.scan("Node", 1),
+        ),
+    )
+    sq = fra.Select(TRUE, identity_key(1), SQUARE, conv)
+    loss = fra.Agg(
+        EMPTY_KEY, ADD, fra.Select(TRUE, identity_key(1), SUM_CHUNK, sq)
+    )
+    mean = fra.Select(TRUE, identity_key(0), scale_kernel(1.0 / n), loss)
+    return ra_autodiff(fra.Query(mean, inputs=("Edge", "Node")))
+
+
+def _env(rng, n: int, e: int, d: int, num_shards: int):
+    src = rng.integers(0, n, size=e)
+    dst = rng.integers(0, n, size=e)
+    w = rng.normal(size=e) / np.sqrt(e / n)
+    edge = partitioned_edges(
+        np.stack([src, dst], 1), w.astype(np.float32), n, num_shards
+    )
+    return {
+        "Edge": edge,
+        "Node": DenseRelation(
+            jnp.asarray(rng.normal(size=(n, d)), jnp.float32), 1
+        ),
+    }
+
+
+def _edge_bytes_per_device(comp, env) -> int:
+    """Max over devices of the edge relation's placed shard bytes (keys +
+    values), read off the compiled step's actual in_shardings."""
+    sh_don, sh_kept = comp.in_shardings
+    target = {**sh_kept, **sh_don}["Edge"]
+    placed = jax.device_put(comp._padded(env)["Edge"], target)
+    per_device: dict = {}
+    for arr in (placed.keys, placed.values):
+        for s in arr.addressable_shards:
+            per_device[s.device.id] = per_device.get(s.device.id, 0) + int(
+                np.prod(s.data.shape) * s.data.dtype.itemsize
+            )
+    return max(per_device.values())
+
+
+def run() -> None:
+    n_dev = jax.device_count()
+    rng = np.random.default_rng(7)
+    for name, n, e, d in GRAPHS:
+        if n_dev < 2:
+            record(
+                f"coo_scale/{name}/replicated", 0.0,
+                f"skipped=single_device;devices={n_dev}",
+            )
+            continue
+        env = _env(rng, n, e, d, n_dev)
+        prog = _gcn_prog(n)
+        eng = RAEngine(prog)
+        low = eng.lower(env)
+
+        lanes = {
+            # model-only mesh: no data axes -> the COO is replicated
+            "replicated": make_host_mesh(model=n_dev),
+            # data-only mesh: nnz rows sharded n_dev ways
+            "sharded": make_host_mesh(model=1),
+        }
+        base = None
+        for lane, mesh in lanes.items():
+            comp = low.compile(mesh=mesh)
+            out, grads = comp(env)
+            leaves = [np.asarray(out.data)] + [
+                np.asarray(
+                    g.values if hasattr(g, "values") else g.data
+                )
+                for _, g in sorted(grads.items())
+            ]
+            if base is None:
+                base = leaves
+            else:
+                for got, want in zip(leaves, base):
+                    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-5)
+            ebytes = _edge_bytes_per_device(comp, env)
+            placement = comp.placements["Edge"]
+            us = timeit(lambda: comp(env), iters=5, warmup=2)
+            record(
+                f"coo_scale/{name}/{lane}", us,
+                f"edge_bytes_per_device={ebytes};nnz_data_dim="
+                f"{placement['data']};E={e};n={n};d={d}",
+            )
+
+
+if __name__ == "__main__":
+    from .common import ROWS, emit_header, emit_json
+
+    emit_header()
+    run()
+    emit_json("BENCH_coo_scale.json", ROWS)

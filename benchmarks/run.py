@@ -8,6 +8,9 @@
   engine_overhead  staged engine: eager re-lowering vs cached Compiled
   kernel_dispatch  dispatch tiers: jnp vs ref (vs pallas on TPU), raw
                    kernels + compiled logreg/GCN grad steps
+  coo_scale        COO nnz sharding: replicated vs nnz-sharded GCN grad
+                   step, per-device edge-relation bytes (needs >=2
+                   devices for the sharded lane to differ)
 
 Each suite's rows are also written to BENCH_<suite>.json.
 
@@ -21,6 +24,7 @@ from .common import ROWS, emit_header, emit_json
 
 def main() -> None:
     from . import (
+        coo_scale,
         engine_overhead,
         gcn,
         kernel_dispatch,
@@ -38,6 +42,7 @@ def main() -> None:
         "rjp_ablation": rjp_ablation.run,
         "engine_overhead": engine_overhead.run,
         "kernel_dispatch": kernel_dispatch.run,
+        "coo_scale": coo_scale.run,
     }
     names = sys.argv[1:] or list(suites)
     unknown = [n for n in names if n not in suites]

@@ -19,14 +19,18 @@ planner (planner.py — 2-D (data × model) plans on a launch/mesh mesh) +
 the XLA SPMD partitioner, which inserts the chosen plan's model-axis
 psum and data-axis batch collectives around the lowerings emitted here.
 
-The two hardware hot-spots — the Σ over a CooRelation and the
-matmul-shaped Σ∘⋈ einsum — are not called directly: each lowering site is
+The three hardware hot-spots — the Σ over a CooRelation, the matmul-shaped
+Σ∘⋈ einsum, and the COO gather join (edge ⋈ node, plus the restricted-join
+sparse-gradient gather) — are not called directly: each lowering site is
 resolved against the kernel dispatch registry (kernels.py), which routes
-it to the Pallas TPU kernels (kernels/segsum, kernels/matmul), their
-interpret/ref CPU tiers, or the default jnp path, according to the
-``DispatchTable`` the engine threads through ``_execute_graph``. Resolved
-tiers are recorded into the caller's ``resolutions`` dict (the engine
-exposes them on ``Compiled.resolutions``).
+it to the Pallas TPU kernels (kernels/segsum, kernels/matmul,
+kernels/gather), their interpret/ref CPU tiers, or the default jnp path,
+according to the ``DispatchTable`` the engine threads through
+``_execute_graph``. Resolved tiers are recorded into the caller's
+``resolutions`` dict (the engine exposes them on ``Compiled.resolutions``).
+All gather/scatter sites honour the COO pad-and-mask contract: negative
+(padding) key components gather zero rows and are dropped by segment sums,
+so an nnz axis padded up to a shard multiple stays numerically inert.
 
 Dense gradients of *absent* tuples: a relational gradient relation simply
 lacks tuples that received no contribution; a dense array cannot express
@@ -352,8 +356,55 @@ def _aligned_join(
 # ---------------------------------------------------------------------------
 
 
+def _dispatched_gather(
+    dense: DenseRelation,
+    idx_cols: Tuple[jnp.ndarray, ...],
+    dispatch,
+    resolutions: Optional[Dict],
+) -> jnp.ndarray:
+    """Gather rows of ``dense`` at per-key-dim index columns through the
+    ``gather_join`` dispatch op: the key grid is flattened to one row axis
+    and the chunk to one feature axis, matching the op contract
+    ``fn(table2d, rows) → table2d[rows]`` (out-of-range / negative ids —
+    the COO nnz padding — yield zero rows). Returns (E, *chunk)."""
+    assert len(idx_cols) == dense.key_arity and dense.key_arity > 0
+    e = idx_cols[0].shape[0]
+    chunk = dense.chunk_shape
+    if e == 0:
+        # zero-nnz COO guard: every tier agrees on the empty gather
+        return jnp.zeros((0,) + chunk, dtype=dense.data.dtype)
+    # flat row ids; any out-of-range component poisons the row to -1 so
+    # the kernel's mask drops it
+    valid = None
+    flat = jnp.zeros((e,), dtype=jnp.int32)
+    for ext, col in zip(dense.extents, idx_cols):
+        col = col.astype(jnp.int32)
+        ok = (col >= 0) & (col < ext)
+        valid = ok if valid is None else (valid & ok)
+        flat = flat * ext + jnp.clip(col, 0, max(ext - 1, 0))
+    rows = jnp.where(valid, flat, jnp.int32(-1))
+    n = math.prod(dense.extents)
+    d = math.prod(chunk)
+    info = {"rows": e, "num_rows": n, "dim": d, "dtype": dense.data.dtype}
+    impl = kernels.resolve_impl("gather_join", info, dispatch)
+    _note(resolutions, "gather_join", f"E={e},N={n},D={d}", impl)
+    table2 = dense.data.reshape(n, d)
+    return impl.fn(table2, rows).reshape((e,) + chunk)
+
+
+def _mask_padded_rows(keys: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """Zero value rows whose key carries a negative (padding) component, so
+    padded nnz rows stay inert through non-multiplicative kernels too."""
+    valid = jnp.all(keys >= 0, axis=1)
+    return jnp.where(
+        valid.reshape((-1,) + (1,) * (vals.ndim - 1)),
+        vals,
+        jnp.zeros((), dtype=vals.dtype),
+    )
+
+
 def _coo_join(
-    join: fra.Join, lrel: AnyRel, rrel: AnyRel
+    join: fra.Join, lrel: AnyRel, rrel: AnyRel, dispatch, resolutions
 ) -> CooRelation:
     coo_is_left = isinstance(lrel, CooRelation)
     coo = lrel if coo_is_left else rrel
@@ -373,12 +424,13 @@ def _coo_join(
             "COO join requires every dense key component matched (gather)"
         )
     idx = tuple(coo.keys[:, d2c[j]] for j in range(dense.key_arity))
-    gathered = dense.data[idx]  # (nnz, *chunk_dense)
+    gathered = _dispatched_gather(dense, idx, dispatch, resolutions)
     kfn = _vmapped(join.kernel.fn, 1)
     if coo_is_left:
         vals = kfn(coo.values, gathered)
     else:
         vals = kfn(gathered, coo.values)
+    vals = _mask_padded_rows(coo.keys, vals)
 
     cols = []
     extents = []
@@ -439,11 +491,17 @@ def _solve_side_from_output(
 
 
 def _restricted_join(
-    join: fra.Join, ref: CooRelation, lrel: AnyRel, rrel: AnyRel
+    join: fra.Join,
+    ref: CooRelation,
+    lrel: AnyRel,
+    rrel: AnyRel,
+    dispatch=None,
+    resolutions: Optional[Dict] = None,
 ) -> CooRelation:
     """Evaluate a dense⋈dense join only at the key set of ``ref``: gather
     both operands per ref-tuple and apply the kernel pointwise. This is the
-    sparse-gradient fast path (e.g. ∂loss/∂edge_weights = g[dst]·h[src])."""
+    sparse-gradient fast path (e.g. ∂loss/∂edge_weights = g[dst]·h[src]);
+    the per-tuple gathers route through the ``gather_join`` dispatch op."""
     if not (isinstance(lrel, DenseRelation) and isinstance(rrel, DenseRelation)):
         raise LoweringError("restricted join requires dense operands")
     la, ra = join.left.key_arity, join.right.key_arity
@@ -459,13 +517,16 @@ def _restricted_join(
                 idx.append(jnp.full((ref.nnz,), e.val, dtype=ref.keys.dtype))
             else:
                 idx.append(ref.keys[:, e])
-        return rel.data[tuple(idx)] if idx else jnp.broadcast_to(
-            rel.data, (ref.nnz,) + rel.chunk_shape
+        return (
+            _dispatched_gather(rel, tuple(idx), dispatch, resolutions)
+            if idx
+            else jnp.broadcast_to(rel.data, (ref.nnz,) + rel.chunk_shape)
         )
 
     lv = gather(lrel, lex)
     rv = gather(rrel, rex)
     vals = _vmapped(join.kernel.fn, 1)(lv, rv)
+    vals = _mask_padded_rows(ref.keys, vals)
     # Chunk-level broadcasting in the forward kernel (e.g. scalar edge
     # weight × embedding chunk) dualizes to a reduction in the backward:
     # sum the VJP chunk down to the target relation's chunk shape.
@@ -477,7 +538,9 @@ def _restricted_join(
         if got != want:
             assert want == 1, (vals.shape, tgt)
             vals = jnp.sum(vals, axis=1 + ax, keepdims=True)
-    return CooRelation(ref.keys, vals, ref.extents)
+    return CooRelation(
+        ref.keys, vals, ref.extents, ref.owner_dim, ref.shard_offsets
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -524,7 +587,7 @@ def _execute_graph(
         if isinstance(lrel, CooRelation) or isinstance(rrel, CooRelation):
             if isinstance(lrel, CooRelation) and isinstance(rrel, CooRelation):
                 raise LoweringError("COO ⋈ COO not supported")
-            out = _coo_join(n, lrel, rrel)
+            out = _coo_join(n, lrel, rrel, dispatch, resolutions)
             if grp is not None:
                 out = _agg_coo(grp, out)
             return out
@@ -571,6 +634,14 @@ def _execute_graph(
             raise LoweringError("Lit grp over COO not supported")
         keep = [c.idx for c in grp.comps]
         extents = tuple(rel.extents[i] for i in keep)
+        if rel.nnz == 0:
+            # zero-nnz guard: the registered tiers can disagree on the
+            # dtype/shape of a segment_sum over empty arrays — the Σ of
+            # no tuples is the ⊕-unit grid, emitted without dispatching
+            return DenseRelation(
+                jnp.zeros(extents + rel.chunk_shape, dtype=rel.values.dtype),
+                key_arity=len(extents),
+            )
         if not extents:
             return DenseRelation(jnp.sum(rel.values, axis=0), key_arity=0)
         flat = jnp.zeros((rel.nnz,), dtype=jnp.int32)
@@ -615,6 +686,9 @@ def _execute_graph(
                     extents.append(rel.extents[c.idx])
                 keys = jnp.stack(cols, axis=1)
                 vals = _vmapped(n.kernel.fn, 1)(rel.values)
+                # σ kernels with f(0) != 0 would resurrect padded rows;
+                # re-mask so they stay inert through full-reduce Σs
+                vals = _mask_padded_rows(rel.keys, vals)
                 return CooRelation(keys, vals, tuple(extents))
             if n.pred.custom is not None:
                 raise LoweringError("custom σ predicate not compilable")
@@ -659,15 +733,20 @@ def _execute_graph(
             if isinstance(n.child, fra.Join):
                 lrel, rrel = ex(n.child.left), ex(n.child.right)
                 if isinstance(lrel, DenseRelation) and isinstance(rrel, DenseRelation):
-                    return _restricted_join(n.child, ref, lrel, rrel)
+                    return _restricted_join(
+                        n.child, ref, lrel, rrel, dispatch, resolutions
+                    )
             child = ex(n.child)
             if isinstance(child, CooRelation):
                 # By construction RJP outputs over a sparse target reuse the
                 # target's key order.
                 return child
-            # Dense child: gather at ref keys.
+            # Dense child: gather at ref keys (padding rows gather zeros).
             idx = tuple(ref.keys[:, i] for i in range(ref.key_arity))
-            return CooRelation(ref.keys, child.data[idx], ref.extents)
+            vals = _dispatched_gather(child, idx, dispatch, resolutions)
+            return CooRelation(
+                ref.keys, vals, ref.extents, ref.owner_dim, ref.shard_offsets
+            )
         if isinstance(n, fra.AddOp):
             a, b = ex(n.left), ex(n.right)
             if isinstance(a, DenseRelation) and isinstance(b, DenseRelation):

@@ -46,6 +46,7 @@ import contextlib
 import contextvars
 import dataclasses
 import functools
+import warnings
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple, Union
 
@@ -55,11 +56,35 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import fra, kernels, planner
 from .autodiff import GradientProgram
-from .relation import CooRelation, DenseRelation
+from .relation import CooRelation, DenseRelation, pad_coo_nnz
 
 AnyRel = Union[DenseRelation, CooRelation]
 Env = Dict[str, AnyRel]
 Program = Union[fra.Query, fra.Node, GradientProgram]
+
+
+class ShardFallbackWarning(UserWarning):
+    """A planned sharding could not be emitted and the relation fell back
+    to replication. Structured: carries the relation name, the offending
+    dim/extent, and the divisor, so callers can grep/assert on them."""
+
+    def __init__(self, relation: str, dim: int, extent: int, divisor: int):
+        self.relation = relation
+        self.dim = dim
+        self.extent = extent
+        self.divisor = divisor
+        super().__init__(
+            f"relation {relation!r}: planned sharding of block dim {dim} "
+            f"(extent {extent}) dropped — not divisible by the mesh axes' "
+            f"product {divisor}; the dim is replicated instead"
+        )
+
+
+class ReshardWarning(UserWarning):
+    """``Compiled.__call__`` moved committed input bytes to the planned
+    layout via device_put — an all-to-all the plan did not account for.
+    Emitted once per Compiled; see ``Compiled.reshard_stats`` and fold the
+    cost into planning with ``compile(committed=...)``."""
 
 
 # ---------------------------------------------------------------------------
@@ -85,6 +110,8 @@ def _rel_signature(name: str, rel: AnyRel) -> Tuple:
             str(rel.keys.dtype),
             tuple(rel.values.shape),
             str(rel.values.dtype),
+            rel.owner_dim,
+            rel.shard_offsets,
         )
     raise TypeError(f"env entry {name!r} is not a relation: {type(rel)}")
 
@@ -136,6 +163,7 @@ class Compiled:
         mesh,
         geometry: Optional[planner.MeshGeometry] = None,
         in_shardings: Optional[Tuple[Dict, Dict]] = None,
+        pad_nnz: Optional[Dict[str, int]] = None,
     ):
         self.lowered = lowered
         self._jitted = jitted
@@ -150,6 +178,31 @@ class Compiled:
         #: (donated, kept) relation-shaped sharding pytrees when a mesh
         #: was given; __call__ reshards inputs to the planned layout.
         self.in_shardings = in_shardings
+        #: COO relations whose nnz axis is padded to a shard multiple
+        #: (pad-and-mask): relation name → padded row count. __call__ pads
+        #: inputs and slices nnz-shaped outputs back.
+        self.pad_nnz = dict(pad_nnz or {})
+        #: device-layout rechunk accounting for the silent-reshard path:
+        #: calls, calls that moved committed bytes, cumulative and
+        #: last-call bytes moved by __call__'s device_put.
+        self.reshard_stats: Dict[str, int] = {
+            "calls": 0,
+            "resharded_calls": 0,
+            "bytes_moved": 0,
+            "last_call_bytes": 0,
+        }
+        self._reshard_warned = False
+        # flattened target leaves per relation, precomputed so the per-call
+        # accounting never re-walks the sharding pytrees
+        self._reshard_targets = (
+            {
+                name: jax.tree_util.tree_leaves(target)
+                for shards in in_shardings
+                for name, target in shards.items()
+            }
+            if in_shardings is not None
+            else {}
+        )
 
     @property
     def dispatch(self) -> kernels.DispatchTable:
@@ -166,13 +219,15 @@ class Compiled:
     @property
     def placements(self) -> Dict[str, Dict[str, Optional[int]]]:
         """``relation → {"data": dim, "model": dim}`` record of the 2-D
-        placement of every base relation: which block axis carries the
-        mesh's (folded) data axes and which carries the model axis
-        (``None`` = replicated on that mesh axis). The distribution
-        analogue of ``resolutions``. Compiled against a mesh, this reads
-        the *effective* in_shardings (after non-divisible axes were
-        dropped and COO relations replicated); without a mesh it reports
-        the planner's intent from ``input_specs``."""
+        placement of every base relation: which axis carries the mesh's
+        (folded) data axes and which carries the model axis (``None`` =
+        replicated on that mesh axis). For a CooRelation, dim 0 is the
+        physical nnz row axis — ``{"data": 0}`` is the nnz-sharded
+        layout. The distribution analogue of ``resolutions``. Compiled
+        against a mesh, this reads the *effective* in_shardings (after
+        non-divisible dense axes were dropped and non-divisible nnz axes
+        padded); without a mesh it reports the planner's intent from
+        ``input_specs``."""
         geo = self.geometry
         model_axis = geo.model_axis if geo is not None else "model"
         data_axes = set(geo.data_axes) if geo is not None else set()
@@ -196,9 +251,61 @@ class Compiled:
             for name, rel in shards.items():
                 if isinstance(rel, DenseRelation):
                     out[name] = dims_of(rel.data.spec)
-                else:  # CooRelation: kept replicated
-                    out[name] = {"data": None, "model": None}
+                else:  # CooRelation: values sharding covers (nnz, *chunk)
+                    out[name] = dims_of(rel.values.spec)
         return out
+
+    def _count_reshard_bytes(self, env: Env) -> int:
+        """Bytes of *committed* input arrays whose layout differs from the
+        planned in_sharding — the silent all-to-all device_put pays.
+        Uncommitted arrays place for free and cost only an attribute
+        probe; the target leaves are precomputed at compile time."""
+        moved = 0
+        for name, targets in self._reshard_targets.items():
+            rel = env.get(name)
+            if rel is None:
+                continue
+            for arr, sh in zip(jax.tree_util.tree_leaves(rel), targets):
+                if not getattr(arr, "committed", False):
+                    continue  # uncommitted inputs place for free
+                cur = getattr(arr, "sharding", None)
+                if getattr(cur, "is_fully_replicated", False):
+                    continue  # slicing a replicated array moves nothing
+                try:
+                    same = cur is not None and cur.is_equivalent_to(sh, arr.ndim)
+                except Exception:
+                    same = cur == sh
+                if not same:
+                    moved += int(arr.nbytes)
+        return moved
+
+    def _padded(self, env: Env) -> Env:
+        if not self.pad_nnz:
+            return env
+        out = dict(env)
+        for name, target in self.pad_nnz.items():
+            if name in out:
+                out[name] = pad_coo_nnz(out[name], target)
+        return out
+
+    def _unpad(self, out):
+        """Slice padded nnz axes out of the results: any output leaf whose
+        leading dim exceeds the unpadded lowering's expectation (all other
+        dims equal) is a row-aligned COO payload and is cut back."""
+        def cut(got, want):
+            wshape = tuple(want.shape)
+            if (
+                hasattr(got, "shape")
+                and tuple(got.shape) != wshape
+                and len(got.shape) == len(wshape)
+                and wshape
+                and got.shape[0] > wshape[0]
+                and tuple(got.shape[1:]) == wshape[1:]
+            ):
+                return got[: wshape[0]]
+            return got
+
+        return jax.tree_util.tree_map(cut, out, self.lowered.out_shape)
 
     def __call__(self, env: Env, seed: Optional[AnyRel] = None):
         sig = env_signature(env, seed)
@@ -208,6 +315,12 @@ class Compiled:
                 "lowering; call RAEngine.lower(env) again for the new "
                 f"shapes.\n  lowered: {self.lowered.sig}\n  got:     {sig}"
             )
+        if self.in_shardings is not None:
+            # Reshard accounting runs on the *pre-pad* env: padding makes
+            # fresh (uncommitted) arrays, which would hide a committed
+            # input's layout mismatch from the stats.
+            moved = self._count_reshard_bytes(env)
+        env = self._padded(env)
         donated = {k: env[k] for k in self.donate_names}
         kept = {k: v for k, v in env.items() if k not in self.donate_names}
         if self.in_shardings is not None:
@@ -215,22 +328,55 @@ class Compiled:
             # step may be committed to a different placement (e.g. a
             # gradient seed laid out by the forward's compiled output);
             # device_put inserts the re-blocking collective and is a
-            # no-op when the layout already matches.
+            # no-op when the layout already matches. The bytes moved are
+            # counted on reshard_stats and warned about once — fold them
+            # into the plan via compile(committed=...).
             sh_don, sh_kept = self.in_shardings
+            stats = self.reshard_stats
+            stats["calls"] += 1
+            stats["last_call_bytes"] = moved
+            if moved:
+                stats["resharded_calls"] += 1
+                stats["bytes_moved"] += moved
+                if not self._reshard_warned:
+                    self._reshard_warned = True
+                    warnings.warn(
+                        ReshardWarning(
+                            f"Compiled step resharded {moved} committed "
+                            f"input bytes to the planned layout (an "
+                            f"all-to-all the plan did not cost); pass "
+                            f"committed= layouts to compile() to fold it "
+                            f"into the plan. See Compiled.reshard_stats."
+                        ),
+                        stacklevel=2,
+                    )
             donated = jax.device_put(donated, sh_don)
             kept = jax.device_put(kept, sh_kept)
-        return self._jitted(donated, kept, seed)
+        out = self._jitted(donated, kept, seed)
+        return self._unpad(out) if self.pad_nnz else out
 
     def lower_text(self, *, compiled: bool = True) -> str:
         """HLO of the jitted step (diagnostics). ``compiled=True`` returns
         post-SPMD-partitioning HLO — the text in which the plan's
         collectives (all-reduce/all-gather) are visible; ``compiled=False``
         returns the pre-partitioning StableHLO."""
-        don = {k: self.lowered.abstract_env[k] for k in self.donate_names}
+        abstract = dict(self.lowered.abstract_env)
+        for name, target in self.pad_nnz.items():
+            rel = abstract[name]
+            abstract[name] = CooRelation(
+                jax.ShapeDtypeStruct(
+                    (target,) + tuple(rel.keys.shape[1:]), rel.keys.dtype
+                ),
+                jax.ShapeDtypeStruct(
+                    (target,) + tuple(rel.values.shape[1:]), rel.values.dtype
+                ),
+                rel.extents,
+                rel.owner_dim,
+                rel.shard_offsets,
+            )
+        don = {k: abstract[k] for k in self.donate_names}
         kept = {
-            k: v
-            for k, v in self.lowered.abstract_env.items()
-            if k not in self.donate_names
+            k: v for k, v in abstract.items() if k not in self.donate_names
         }
         lowered = self._jitted.lower(don, kept, self.lowered.abstract_seed)
         if compiled:
@@ -288,6 +434,7 @@ class Lowered:
         donate: Tuple[str, ...] = (),
         mem_budget: float = planner.DEFAULT_MEM_BUDGET,
         n_devices: Optional[int] = None,
+        committed: Optional[Dict[str, P]] = None,
     ) -> Compiled:
         """plan_query → in_shardings → jax.jit.
 
@@ -296,13 +443,25 @@ class Lowered:
         planner reads the real (data × model) geometry off it
         (``planner.MeshGeometry.from_mesh``): a 1-axis mesh reproduces
         the historical 1-D model-axis plans, a 2-D mesh adds per-relation
-        batch-dim sharding over the (folded) data axes. None compiles for
-        the default (single-device) placement but still runs the planner
-        (the plans are inspectable either way).
+        batch-dim sharding over the (folded) data axes and may shard a
+        CooRelation's nnz rows over them (padding non-divisible row
+        counts — pad-and-mask — instead of falling back to replication).
+        None compiles for the default (single-device) placement but still
+        runs the planner (the plans are inspectable either way).
         ``axis`` overrides the name of the model axis (default: the
         mesh's ``"model"`` axis, or its sole axis).
         ``donate`` names env entries whose buffers jit may reuse
-        (parameters / optimizer state on the training hot path).
+        (parameters / optimizer state on the training hot path). Note:
+        a donated COO relation whose nnz is padded per call donates the
+        padded *copy*, not the caller's buffer — pre-pad to the shard
+        multiple (``relation.owner_partition`` / ``pad_coo_nnz``) so
+        ``pad_nnz`` stays empty and donation reaches the real buffers.
+        ``committed`` maps relation names to the PartitionSpec their
+        arrays are already committed to (``committed_layouts(env)``
+        derives it): the planner then charges candidates that would force
+        a device-layout rechunk, instead of ``Compiled.__call__`` paying
+        the all-to-all silently (it still counts such moves on
+        ``Compiled.reshard_stats``).
         """
         donate = tuple(sorted(donate))
         geo = (
@@ -316,7 +475,12 @@ class Lowered:
             # an explicit n_devices overrides the mesh-derived model-axis
             # size in the cost model (legacy contract)
             geo = dataclasses.replace(geo, model_size=n_devices)
-        key = (mesh, axis, donate, mem_budget, n_devices, geo)
+        committed_key = (
+            tuple(sorted((k, v) for k, v in committed.items()))
+            if committed
+            else None
+        )
+        key = (mesh, axis, donate, mem_budget, n_devices, geo, committed_key)
         hit = self._compiled.get(key)
         if hit is not None:
             return hit
@@ -331,6 +495,7 @@ class Lowered:
             n_devices,
             mem_budget=mem_budget,
             geometry=geo,
+            committed=committed,
         )
         input_specs = planner.input_pspecs(fwd_query, plans)
 
@@ -338,25 +503,45 @@ class Lowered:
         engine = self.engine
         table = self.dispatch
 
+        jit_kwargs: Dict[str, Any] = {"donate_argnums": (0,)} if donate else {}
+        shardings = None
+        pad_nnz: Dict[str, int] = {}
+        coo_pins: Dict[str, CooRelation] = {}
+        if mesh is not None:
+            sh_don: Dict[str, AnyRel] = {}
+            sh_kept: Dict[str, AnyRel] = {}
+            for k, rel in self.abstract_env.items():
+                sharding, pad = self._rel_sharding(
+                    k, rel, input_specs.get(k), mesh
+                )
+                (sh_don if k in donate else sh_kept)[k] = sharding
+                if pad is not None:
+                    pad_nnz[k] = pad
+                if isinstance(sharding, CooRelation) and tuple(
+                    sharding.values.spec
+                ):
+                    # nnz-sharded COO: pin the layout inside the jitted
+                    # step too, so the traced segment-sum + scatter-add
+                    # stays partitioned over the planned data axes (the
+                    # per-shard local segsum + psum the plan costed)
+                    # regardless of how XLA would re-place the operands.
+                    coo_pins[k] = sharding
+            jit_kwargs["in_shardings"] = (sh_don, sh_kept, None)
+            shardings = (sh_don, sh_kept)
+
         def step(donated_env: Env, kept_env: Env, seed):
             env = dict(kept_env)
             env.update(donated_env)
+            for name, sh in coo_pins.items():
+                rel = env[name]
+                env[name] = CooRelation(
+                    jax.lax.with_sharding_constraint(rel.keys, sh.keys),
+                    jax.lax.with_sharding_constraint(rel.values, sh.values),
+                    rel.extents,
+                    rel.owner_dim,
+                    rel.shard_offsets,
+                )
             return engine._execute(env, seed, dispatch=table)
-
-        jit_kwargs: Dict[str, Any] = {"donate_argnums": (0,)} if donate else {}
-        shardings = None
-        if mesh is not None:
-            sh_don = {
-                k: self._rel_sharding(self.abstract_env[k], input_specs.get(k), mesh)
-                for k in donate
-            }
-            sh_kept = {
-                k: self._rel_sharding(rel, input_specs.get(k), mesh)
-                for k, rel in self.abstract_env.items()
-                if k not in donate
-            }
-            jit_kwargs["in_shardings"] = (sh_don, sh_kept, None)
-            shardings = (sh_don, sh_kept)
 
         compiled = Compiled(
             self,
@@ -367,35 +552,74 @@ class Lowered:
             mesh,
             geo,
             shardings,
+            pad_nnz,
         )
         self._compiled[key] = compiled
         return compiled
 
     @staticmethod
-    def _rel_sharding(rel: AnyRel, spec: Optional[P], mesh):
-        """Relation-shaped sharding pytree: the planner's block-axis spec,
-        padded over chunk axes and dropped on non-divisible extents; a
+    def _rel_sharding(
+        name: str, rel: AnyRel, spec: Optional[P], mesh
+    ) -> Tuple[AnyRel, Optional[int]]:
+        """Relation-shaped sharding pytree for one relation, plus the
+        padded nnz row count when a COO's planned nnz sharding does not
+        divide (pad-and-mask; ``None`` = no padding needed).
+
+        Dense: the planner's block-axis spec, padded over chunk axes; a
         2-D plan's folded data-axis tuples (("pod", "data")) divide by
-        the axes' product. COO relations are kept replicated (their
-        key/value rows have no block axes to co-partition statically)."""
+        the axes' product, and non-divisible extents fall back to
+        replicating that dim with a structured ``ShardFallbackWarning``.
+
+        COO: the planner's nnz spec (entry 0) lands on the keys/values
+        row axis; a non-divisible row count is padded up to the next
+        shard multiple rather than silently replicated."""
+        sizes = dict(mesh.shape)
+
+        def axes_total(ax) -> Optional[int]:
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            if any(a not in sizes for a in axes):
+                return None
+            total = 1
+            for a in axes:
+                total *= int(sizes[a])
+            return total
+
         if isinstance(rel, CooRelation):
             rep = NamedSharding(mesh, P())
-            return CooRelation(rep, rep, rel.extents)
-        sizes = dict(mesh.shape)
+            row_ax = tuple(spec)[0] if spec is not None and tuple(spec) else None
+            total = axes_total(row_ax) if row_ax is not None else None
+            if row_ax is None or total is None or total <= 1:
+                return CooRelation(
+                    rep, rep, rel.extents, rel.owner_dim, rel.shard_offsets
+                ), None
+            nnz = int(rel.keys.shape[0])
+            pad = ((nnz + total - 1) // total) * total if nnz % total else None
+            keys_sh = NamedSharding(mesh, P(row_ax, None))
+            vals_sh = NamedSharding(
+                mesh, P(row_ax, *([None] * (rel.values.ndim - 1)))
+            )
+            return CooRelation(
+                keys_sh, vals_sh, rel.extents, rel.owner_dim, rel.shard_offsets
+            ), pad
+
         full = [None] * len(rel.data.shape)
         if spec is not None:
             for d, ax in enumerate(tuple(spec)):
                 if ax is None or d >= rel.key_arity:
                     continue
-                axes = ax if isinstance(ax, tuple) else (ax,)
-                if any(a not in sizes for a in axes):
+                total = axes_total(ax)
+                if total is None:
                     continue
-                total = 1
-                for a in axes:
-                    total *= int(sizes[a])
                 if rel.data.shape[d] % total == 0:
                     full[d] = ax
-        return DenseRelation(NamedSharding(mesh, P(*full)), rel.key_arity)
+                elif total > 1:
+                    warnings.warn(
+                        ShardFallbackWarning(
+                            name, d, int(rel.data.shape[d]), total
+                        ),
+                        stacklevel=3,
+                    )
+        return DenseRelation(NamedSharding(mesh, P(*full)), rel.key_arity), None
 
 
 # ---------------------------------------------------------------------------
@@ -568,6 +792,25 @@ def default_mesh():
     """The innermost ``use_mesh`` mesh, or None."""
     stack = _MESH_STACK.get()
     return stack[-1] if stack else None
+
+
+def committed_layouts(env: Env) -> Dict[str, P]:
+    """PartitionSpec per relation whose arrays are *committed* to a
+    NamedSharding layout (outputs of earlier compiled steps; explicitly
+    device_put inputs) — the dict ``Lowered.compile(committed=...)``
+    expects, so the planner charges device-layout rechunks instead of
+    ``Compiled.__call__`` silently paying them. Uncommitted (freshly
+    created) arrays place for free and are omitted."""
+    out: Dict[str, P] = {}
+    for name, rel in env.items():
+        arr = rel.data if isinstance(rel, DenseRelation) else rel.values
+        sh = getattr(arr, "sharding", None)
+        if (
+            getattr(arr, "committed", False)
+            and isinstance(sh, NamedSharding)
+        ):
+            out[name] = sh.spec
+    return out
 
 
 def engine_for(program: Program, *, fuse_join_agg: bool = True) -> RAEngine:

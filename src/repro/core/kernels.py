@@ -242,6 +242,11 @@ def scale_kernel(c: float) -> UnaryKernel:
 #                   msg2d: (E, D) float, seg: (E,) int32 (out-of-range ids
 #                   are dropped), returns (num_segments, D).
 #   blocked_matmul  the matmul-shaped Σ∘⋈ einsum — fn(x2d, y2d) → x @ y.
+#   gather_join     the COO gather join (edge ⋈ node) and the restricted-
+#                   join sparse-gradient gather — fn(table2d, rows),
+#                   table2d: (N, D), rows: (E,) int32; out-of-range /
+#                   negative ids (COO nnz padding) yield zero rows;
+#                   returns (E, D).
 #
 # Instead of calling jax.ops.segment_sum / jnp.einsum directly, the
 # compiler resolves each site against this registry at lowering time. A
@@ -258,7 +263,7 @@ def scale_kernel(c: float) -> UnaryKernel:
 # ---------------------------------------------------------------------------
 
 #: logical ops the compiler routes through the registry.
-DISPATCH_OPS: Tuple[str, ...] = ("segment_sum", "blocked_matmul")
+DISPATCH_OPS: Tuple[str, ...] = ("segment_sum", "blocked_matmul", "gather_join")
 
 #: known tiers, in decreasing specialization order.
 DISPATCH_TIERS: Tuple[str, ...] = ("pallas", "interpret", "ref", "jnp")
@@ -468,6 +473,33 @@ def _matmul_interpret(x, y):
     return blocked_matmul(x, y, interpret=True)
 
 
+def _gather_jnp(table, rows):
+    # the default lowering IS the masked-gather oracle (one definition of
+    # the COO pad-and-mask contract: out-of-range / negative ids gather
+    # zero rows — see kernels/gather/ref.py)
+    from repro.kernels.gather.ref import gather_rows_ref
+
+    return gather_rows_ref(table, rows)
+
+
+def _gather_ref(table, rows):
+    from repro.kernels.gather.ref import gather_rows_ref
+
+    return gather_rows_ref(table, rows)
+
+
+def _gather_pallas(table, rows):
+    from repro.kernels.gather.ops import gather_rows
+
+    return gather_rows(table, rows, interpret=False)
+
+
+def _gather_interpret(table, rows):
+    from repro.kernels.gather.ops import gather_rows
+
+    return gather_rows(table, rows, interpret=True)
+
+
 # The hardware tiers require float inputs (the Pallas kernels accumulate in
 # f32 and store the input dtype); the ref oracles accept anything their jnp
 # twins accept; the jnp tier is the unconditional fallback.
@@ -484,3 +516,13 @@ register_impl(
 register_impl("blocked_matmul", "interpret", _matmul_interpret, predicate=_is_float)
 register_impl("blocked_matmul", "ref", _matmul_ref)
 register_impl("blocked_matmul", "jnp", _matmul_jnp)
+
+# The gather DMA kernel's interpret tier is the CPU-tested path; the TPU
+# hardware tier shares it behind the registry pending tile tuning on real
+# devices (ROADMAP "tier predicates from measurements").
+register_impl(
+    "gather_join", "pallas", _gather_pallas, backends=("tpu",), predicate=_is_float
+)
+register_impl("gather_join", "interpret", _gather_interpret, predicate=_is_float)
+register_impl("gather_join", "ref", _gather_ref)
+register_impl("gather_join", "jnp", _gather_jnp)

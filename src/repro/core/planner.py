@@ -46,6 +46,13 @@ from .relation import CooRelation, DenseRelation
 #: multi-pod production mesh folds ("pod", "data") onto one relation dim.
 DATA_AXIS_NAMES = ("pod", "data")
 
+#: edge-cut estimate for the Σ-over-COO scatter when the edge relation is
+#: owner-partitioned on the Σ's segment key (relation.owner_partition):
+#: each shard then owns a contiguous segment range, so only boundary-
+#: crossing contributions move. 1/8 mirrors the planner's per-dropped-key
+#: Agg heuristic; both want tracked key-domain statistics (ROADMAP).
+EDGE_CUT_LOCAL = 0.125
+
 
 def fold_axes(axes: Tuple[str, ...]):
     """PartitionSpec entry for a dim carrying ``axes``: the folded tuple,
@@ -132,12 +139,24 @@ class JoinPlan:
     model_axis: str = "model"
     data_axes: Tuple[str, ...] = ()
     # chosen data-axis placement: none | data:shard_left | data:shard_right
-    #                             | data:replicate
+    #            | data:replicate | data:shard_nnz_left | data:shard_nnz_right
     data_kind: str = "none"
-    # does the Σ reduce the data-sharded batch key (data-axis all-reduce)?
+    # does the Σ reduce the data-sharded batch key (data-axis all-reduce),
+    # or scatter a data-sharded nnz axis into segments (psum_scatter)?
     needs_data_psum: bool = False
+    # which side is a CooRelation (nnz-row layout, no shardable key dims)
+    coo_sides: Tuple[bool, bool] = (False, False)
+
+    def nnz_sharded(self, side: str) -> bool:
+        """Did the data axes land on ``side``'s COO nnz row dimension?"""
+        return self.data_kind == f"data:shard_nnz_{side}"
 
     def pspec(self, side: str, arity: int, axis: Optional[str] = None) -> P:
+        if self.coo_sides[0 if side == "left" else 1]:
+            # COO payloads have one shardable axis: the nnz row dim.
+            if self.nnz_sharded(side) and self.data_axes:
+                return P(fold_axes(self.data_axes))
+            return P()
         dim = self.left_shard_dim if side == "left" else self.right_shard_dim
         bdim = (
             self.left_batch_dim if side == "left" else self.right_batch_dim
@@ -153,7 +172,11 @@ def _rel_bytes(rel) -> float:
     if isinstance(rel, DenseRelation):
         return float(rel.data.size * rel.data.dtype.itemsize)
     if isinstance(rel, CooRelation):
-        return float(rel.values.size * rel.values.dtype.itemsize)
+        # keys move with the values under every placement of the nnz axis
+        return float(
+            rel.values.size * rel.values.dtype.itemsize
+            + rel.keys.size * rel.keys.dtype.itemsize
+        )
     # ShapeDtypeStruct-like estimate
     size = 1
     for d in rel.shape:
@@ -207,6 +230,9 @@ def plan_join(
     geometry: Optional[MeshGeometry] = None,
     sum_out_bytes: Optional[float] = None,
     batch_survives: Tuple[bool, bool] = (True, True),
+    coo_sides: Tuple[bool, bool] = (False, False),
+    coo_local: Tuple[bool, bool] = (False, False),
+    committed_dims: Tuple[Optional[Dict], Optional[Dict]] = (None, None),
 ) -> JoinPlan:
     """Pick the cheapest *feasible* physical plan by bytes moved per
     device, exactly the way the paper describes the database optimizer
@@ -226,6 +252,23 @@ def plan_join(
     enclosing grouping (a dropped batch key costs a data-axis all-reduce
     of the Σ output). A 1-axis geometry reproduces the historical 1-D
     plans bit-for-bit.
+
+    ``coo_sides`` marks CooRelation sides. A COO side has no block axes —
+    its one shardable axis is the physical nnz row dim, which only the
+    data axes may take (``data:shard_nnz_*``): the dense side is
+    replicated over them and the enclosing Σ pays a **psum_scatter** of
+    the segment grid, priced at the edge-cut estimate — ``EDGE_CUT_LOCAL``
+    when ``coo_local`` says the relation is owner-partitioned on the Σ's
+    segment key, the full scatter otherwise. The model axis never takes
+    nnz rows: a COO side is replicated over it, and a co-partition plan
+    key-shards only the dense side (the one model-axis plan that keeps an
+    over-budget dense grid partitioned, matching the 1-D planner).
+
+    ``committed_dims`` folds the device-layout rechunk cost in: per side,
+    the ``{"data": dim, "model": dim}`` placement the input is *known* to
+    be committed to (None = unknown). A candidate that wants a side
+    pre-sharded on a different dim pays that side's all-to-all, instead
+    of ``Compiled.__call__`` paying it silently per step.
     """
     geo = geometry or MeshGeometry.single(n_devices)
     n_model = max(1, geo.model_size)
@@ -233,35 +276,89 @@ def plan_join(
     two_d = geo.data_size > 1
     lc, rc = _contraction_dims(join)
     lo, ro = _output_dims(join)
+    coo_l, coo_r = coo_sides
+    cdim_l, cdim_r = committed_dims
+
+    def _move(cdims, axis_kind, required, bytes_, frac):
+        """Rechunk fold: a candidate expecting a side pre-sharded on
+        ``required`` while it is committed sharded on a *different* dim
+        pays the all-to-all. Replication candidates charge their
+        all-gather in the base cost already (``required=None`` never
+        adds), and an input committed replicated on this axis shards by a
+        zero-communication local slice (``committed None`` never adds)."""
+        if cdims is None or required is None or frac <= 0.0:
+            return 0.0
+        cur = cdims.get(axis_kind)
+        if cur is None:
+            return 0.0
+        return bytes_ * frac if cur != required else 0.0
 
     costs: Dict[str, float] = {}
 
-    # --- data axes: shard a batch dim, or replicate over them ------------
+    # --- data axes: shard a batch dim / the COO nnz dim, or replicate ----
     left_batch = right_batch = None
     data_kind = "none"
     needs_data_psum = False
     if two_d:
         frac_d = (geo.data_size - 1) / geo.data_size
         sum_out = out_bytes if sum_out_bytes is None else sum_out_bytes
+
+        def _scatter(dense_bytes: float, local: bool) -> float:
+            """psum_scatter of the Σ-over-COO segment grid. Without an
+            enclosing Σ the output stays nnz-aligned (no collective). The
+            segment grid is bounded by the gathered dense side, which caps
+            the post-Agg heuristic."""
+            if sum_out_bytes is None:
+                return 0.0
+            est = min(sum_out, dense_bytes) if dense_bytes > 0 else sum_out
+            return est * frac_d * (EDGE_CUT_LOCAL if local else 1.0)
+
         # feasibility mirrors the model axis: a candidate must fit every
         # relation it replicates within the per-device budget
         dcosts: Dict[str, float] = {}
         if left_bytes <= mem_budget and right_bytes <= mem_budget:
             # no batch parallelism: both inputs replicated over the axes
             dcosts["data:replicate"] = (left_bytes + right_bytes) * frac_d
-        if lo is not None and right_bytes <= mem_budget:
-            dcosts["data:shard_left"] = right_bytes * frac_d + (
-                0.0 if batch_survives[0] else 2.0 * sum_out * frac_d
+        if coo_l:
+            if right_bytes <= mem_budget:
+                dcosts["data:shard_nnz_left"] = (
+                    right_bytes * frac_d
+                    + _scatter(right_bytes, coo_local[0])
+                    + _move(cdim_l, "data", 0, left_bytes, frac_d)
+                )
+        elif lo is not None and right_bytes <= mem_budget:
+            dcosts["data:shard_left"] = (
+                right_bytes * frac_d
+                + (0.0 if batch_survives[0] else 2.0 * sum_out * frac_d)
+                + _move(cdim_l, "data", lo, left_bytes, frac_d)
             )
-        if ro is not None and left_bytes <= mem_budget:
-            dcosts["data:shard_right"] = left_bytes * frac_d + (
-                0.0 if batch_survives[1] else 2.0 * sum_out * frac_d
+        if coo_r:
+            if left_bytes <= mem_budget:
+                dcosts["data:shard_nnz_right"] = (
+                    left_bytes * frac_d
+                    + _scatter(left_bytes, coo_local[1])
+                    + _move(cdim_r, "data", 0, right_bytes, frac_d)
+                )
+        elif ro is not None and left_bytes <= mem_budget:
+            dcosts["data:shard_right"] = (
+                left_bytes * frac_d
+                + (0.0 if batch_survives[1] else 2.0 * sum_out * frac_d)
+                + _move(cdim_r, "data", ro, right_bytes, frac_d)
             )
         if not dcosts:
-            # nothing feasible (e.g. both sides over budget with no batch
-            # dim): best effort — shard a batch dim if one exists so at
-            # least the sharded side stays partitioned, else replicate
-            if lo is not None:
+            # nothing feasible (e.g. both sides over budget): best effort —
+            # keep the partitionable side partitioned (a COO's nnz rows
+            # beat a dense batch dim: that is the only placement that can
+            # ever fit a beyond-memory edge relation), else replicate
+            if coo_l:
+                dcosts["data:shard_nnz_left"] = (
+                    right_bytes * frac_d + _scatter(right_bytes, coo_local[0])
+                )
+            elif coo_r:
+                dcosts["data:shard_nnz_right"] = (
+                    left_bytes * frac_d + _scatter(left_bytes, coo_local[1])
+                )
+            elif lo is not None:
                 dcosts["data:shard_left"] = right_bytes * frac_d
             elif ro is not None:
                 dcosts["data:shard_right"] = left_bytes * frac_d
@@ -275,37 +372,59 @@ def plan_join(
         elif data_kind == "data:shard_right":
             right_batch = ro
             needs_data_psum = not batch_survives[1]
+        elif data_kind.startswith("data:shard_nnz"):
+            # the Σ over the sharded nnz rows always scatters into the
+            # (replicated) segment grid: that IS the planned collective
+            needs_data_psum = sum_out_bytes is not None
 
     # --- model axis: broadcast vs co-partition, avoiding the batch dims --
     # The kept side of a broadcast plan stays sharded on a surviving dim;
     # if the data axes already took that dim, the model axis would sit
     # idle and the "broadcast" degenerates to replicating *both* sides —
     # charge it as such (2-D path only; 1-D keeps the historical costs).
-    lo_m = None if (lo is not None and lo == left_batch) else lo
-    ro_m = None if (ro is not None and ro == right_batch) else ro
+    # A COO side has no key dims at all: it behaves like a dim-less side.
+    lo_m = None if coo_l or (lo is not None and lo == left_batch) else lo
+    ro_m = None if coo_r or (ro is not None and ro == right_batch) else ro
     mcosts: Dict[str, float] = {}
     if left_bytes <= mem_budget:
         c = left_bytes * frac_m
         if two_d and ro_m is None:
             c += right_bytes * frac_m
+        c += _move(cdim_r, "model", ro_m, right_bytes, frac_m)
         mcosts["broadcast_left"] = c
     if right_bytes <= mem_budget:
         c = right_bytes * frac_m
         if two_d and lo_m is None:
             c += left_bytes * frac_m
+        c += _move(cdim_l, "model", lo_m, left_bytes, frac_m)
         mcosts["broadcast_right"] = c
-    if lc is not None and rc is not None:
+    if lc is not None and rc is not None and not (coo_l and coo_r):
         # co-partition on the contraction key: inputs land pre-sharded
         # (no repartition cost for our static plans — parameters/data are
-        # *created* in the planned layout), output needs the psum. The
-        # 2-D path prices the psum at the post-Σ output size.
+        # *created* in the planned layout, and committed_dims charges the
+        # all-to-all when the caller knows otherwise), output needs the
+        # psum. The 2-D path prices the psum at the post-Σ output size.
+        # With one COO side only the dense side is key-sharded (nnz rows
+        # carry no key dims; the gather against the sharded grid pays its
+        # collective via XLA) — still the one model-axis plan that keeps
+        # an over-budget dense side partitioned, as in the 1-D planner.
         psum_out = sum_out if two_d and sum_out_bytes is not None else out_bytes
-        mcosts["copartition"] = 2.0 * psum_out * frac_m
-    if not mcosts:
-        raise ValueError(
-            "no feasible plan: both sides exceed the memory budget and the "
-            "join has no contraction key to co-partition on"
+        mcosts["copartition"] = (
+            2.0 * psum_out * frac_m
+            + _move(cdim_l, "model", None if coo_l else lc, left_bytes, frac_m)
+            + _move(cdim_r, "model", None if coo_r else rc, right_bytes, frac_m)
         )
+    if not mcosts:
+        if coo_l or coo_r:
+            # COO ⋈ COO has no key-shardable side at all; best effort:
+            # replicate both over the model axis
+            kind = "broadcast_left" if coo_l else "broadcast_right"
+            mcosts[kind] = (left_bytes + right_bytes) * frac_m
+        else:
+            raise ValueError(
+                "no feasible plan: both sides exceed the memory budget and "
+                "the join has no contraction key to co-partition on"
+            )
     kind = min(mcosts, key=mcosts.get)
     costs.update(mcosts)
 
@@ -316,9 +435,18 @@ def plan_join(
         data_axes=geo.data_axes,
         data_kind=data_kind,
         needs_data_psum=needs_data_psum,
+        coo_sides=coo_sides,
     )
     if kind == "copartition":
-        return JoinPlan(kind, join.id, costs, lc, rc, needs_psum=True, **common)
+        return JoinPlan(
+            kind,
+            join.id,
+            costs,
+            None if coo_l else lc,
+            None if coo_r else rc,
+            needs_psum=True,
+            **common,
+        )
     if kind == "broadcast_left":
         return JoinPlan(kind, join.id, costs, None, ro_m, needs_psum=False, **common)
     return JoinPlan(kind, join.id, costs, lo_m, None, needs_psum=False, **common)
@@ -348,6 +476,48 @@ def _batch_survival(
     )
 
 
+def _coo_owner_survives(
+    join: fra.Join, agg: Optional[fra.Agg], side: str, owner_dim: Optional[int]
+) -> bool:
+    """Is the COO side's owner-partition column the enclosing Σ's segment
+    key? Then the scatter is local except at shard-boundary segments and
+    the planner prices it at ``EDGE_CUT_LOCAL``."""
+    if agg is None or owner_dim is None:
+        return False
+    comp = L(owner_dim) if side == "left" else R(owner_dim)
+    try:
+        pos = join.proj.comps.index(comp)
+    except ValueError:
+        return False
+    return any(isinstance(c, In) and c.idx == pos for c in agg.grp.comps)
+
+
+def _leaf_name(n) -> Optional[str]:
+    """Base-relation name of a leaf node (TableScan/Const), else None."""
+    if isinstance(n, fra.TableScan):
+        return n.name
+    if isinstance(n, fra.Const):
+        return n.ref
+    return None
+
+
+def _spec_dims(spec, geo: MeshGeometry) -> Optional[Dict[str, Optional[int]]]:
+    """Parse a committed PartitionSpec into the ``{"data": dim, "model":
+    dim}`` placement the rechunk fold compares against."""
+    if spec is None:
+        return None
+    model = data = None
+    for d, entry in enumerate(tuple(spec)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if geo.model_axis in axes:
+            model = d
+        if any(a in geo.data_axes for a in axes):
+            data = d
+    return {"model": model, "data": data}
+
+
 def plan_query(
     query: fra.Query,
     env: Dict[str, object],
@@ -355,13 +525,26 @@ def plan_query(
     mem_budget: float = DEFAULT_MEM_BUDGET,
     *,
     geometry: Optional[MeshGeometry] = None,
+    committed: Optional[Dict[str, P]] = None,
 ) -> Dict[int, JoinPlan]:
     """Walk the query graph, estimate relation sizes bottom-up, and emit a
     JoinPlan per Join node (keyed by node id). ``geometry`` plans for a
     2-D (data × model) mesh (see ``MeshGeometry.from_mesh``); omitted, it
-    is the legacy 1-D model-axis-only geometry over ``n_devices``."""
+    is the legacy 1-D model-axis-only geometry over ``n_devices``.
+
+    CooRelation leaves are planned for real: the walk tracks which
+    subtrees are COO-keyed, and ``plan_join`` may place a join's COO nnz
+    rows on the data axes (``data:shard_nnz_*``), costing the Σ's
+    psum_scatter at the owner-partition edge-cut estimate.
+
+    ``committed`` maps base-relation names to the PartitionSpec their
+    arrays are already committed to (see ``engine.committed_layouts``);
+    candidates that would force a device-layout rechunk then pay the
+    all-to-all in the cost table instead of hiding it in
+    ``Compiled.__call__``'s device_put."""
     geo = geometry or MeshGeometry.single(n_devices)
     sizes: Dict[int, float] = {}
+    is_coo: Dict[int, bool] = {}
     agg_of: Dict[int, fra.Agg] = {}
     joins: List[fra.Join] = []
 
@@ -370,16 +553,20 @@ def plan_query(
             ref = node.name if isinstance(node, fra.TableScan) else node.ref
             if ref in env:
                 sizes[node.id] = _rel_bytes(env[ref])
+                is_coo[node.id] = isinstance(env[ref], CooRelation)
             else:  # unresolved (__seed/__fwd): assume small
                 sizes[node.id] = 0.0
+                is_coo[node.id] = False
         elif isinstance(node, fra.Select):
             sizes[node.id] = sizes[node.child.id]
+            is_coo[node.id] = is_coo[node.child.id]
         elif isinstance(node, fra.Agg):
             # grouping reduces size by the dropped-key fraction; without
             # key-domain statistics assume a 1/8 reduction per dropped key
             child = sizes[node.child.id]
             dropped = max(0, node.child.key_arity - node.key_arity)
             sizes[node.id] = child / (8.0 ** dropped)
+            is_coo[node.id] = False  # Σ over COO materializes the grid
             if isinstance(node.child, fra.Join):
                 agg_of[node.child.id] = node
         elif isinstance(node, fra.Join):
@@ -387,8 +574,28 @@ def plan_query(
             sizes[node.id] = max(
                 sizes[node.left.id], sizes[node.right.id]
             )  # join-agg output is at most the big side
-        elif isinstance(node, (fra.AddOp, fra.Restrict)):
+            is_coo[node.id] = (
+                is_coo[node.left.id] or is_coo[node.right.id]
+            )  # the gather join keeps the COO key set
+        elif isinstance(node, fra.Restrict):
             sizes[node.id] = sizes[node.children[0].id]
+            is_coo[node.id] = is_coo[node.ref.id]
+        elif isinstance(node, fra.AddOp):
+            sizes[node.id] = sizes[node.children[0].id]
+            is_coo[node.id] = is_coo[node.left.id] and is_coo[node.right.id]
+
+    def owner_dim_of(n) -> Optional[int]:
+        name = _leaf_name(n)
+        rel = env.get(name) if name is not None else None
+        return rel.owner_dim if isinstance(rel, CooRelation) else None
+
+    def committed_of(n) -> Optional[Dict[str, Optional[int]]]:
+        if not committed:
+            return None
+        name = _leaf_name(n)
+        if name is None or name not in committed:
+            return None
+        return _spec_dims(committed[name], geo)
 
     plans: Dict[int, JoinPlan] = {}
     for node in joins:
@@ -396,6 +603,7 @@ def plan_query(
         rb = sizes[node.right.id]
         ob = sizes[node.id]
         agg = agg_of.get(node.id)
+        coo_sides = (is_coo[node.left.id], is_coo[node.right.id])
         plans[node.id] = plan_join(
             node,
             lb,
@@ -406,6 +614,12 @@ def plan_query(
             geometry=geo,
             sum_out_bytes=sizes[agg.id] if agg is not None else None,
             batch_survives=_batch_survival(node, agg),
+            coo_sides=coo_sides,
+            coo_local=(
+                _coo_owner_survives(node, agg, "left", owner_dim_of(node.left)),
+                _coo_owner_survives(node, agg, "right", owner_dim_of(node.right)),
+            ),
+            committed_dims=(committed_of(node.left), committed_of(node.right)),
         )
     return plans
 
@@ -424,19 +638,12 @@ def input_pspecs(
     (bottom-most) join wins — XLA resharding handles the rest."""
     specs: Dict[str, P] = {}
 
-    def leaf_name(n) -> Optional[str]:
-        if isinstance(n, fra.TableScan):
-            return n.name
-        if isinstance(n, fra.Const):
-            return n.ref
-        return None
-
     for node in query.root.topo():
         if not isinstance(node, fra.Join) or node.id not in plans:
             continue
         plan = plans[node.id]
         for side, child in (("left", node.left), ("right", node.right)):
-            name = leaf_name(child)
+            name = _leaf_name(child)
             if name is None or name in specs:
                 continue
             specs[name] = plan.pspec(side, child.key_arity, axis)

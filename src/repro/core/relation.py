@@ -17,11 +17,16 @@ so executors can separate block-key axes from within-chunk axes.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: sentinel key component marking padded COO rows (see ``pad_coo_nnz``):
+#: every lowering that consumes COO keys drops out-of-range ids, so padded
+#: rows contribute nothing to gathers or segment sums.
+COO_PAD_KEY = -1
 
 
 @dataclass
@@ -53,9 +58,25 @@ class DenseRelation:
 
 @dataclass
 class CooRelation:
+    """Sparse relation: ``keys`` (nnz, d) int32 + ``values`` (nnz, *chunk).
+
+    The nnz dimension is the *physical* row axis the distribution planner
+    shards over the mesh's data axes (core/planner.py). ``owner_dim`` /
+    ``shard_offsets`` describe the optional **owner-partitioned layout**
+    produced by ``owner_partition``: rows sorted by the key column
+    ``owner_dim`` (the Σ's segment key, e.g. a GCN edge's dst) and padded
+    to a shard multiple, with ``shard_offsets[s]`` recording the first
+    owner key held by shard ``s``. The layout is what lets the planner
+    cost the Σ-over-edges scatter at its edge-cut estimate instead of a
+    full all-reduce. Both fields are static schema (pytree aux data) like
+    ``extents``; ``None`` means unpartitioned.
+    """
+
     keys: jnp.ndarray    # (nnz, key_arity) int32
     values: jnp.ndarray  # (nnz, *chunk)
     extents: Tuple[int, ...]
+    owner_dim: Optional[int] = None
+    shard_offsets: Optional[Tuple[int, ...]] = None
 
     @property
     def key_arity(self) -> int:
@@ -106,12 +127,17 @@ def _dense_unflatten(key_arity: int, children) -> DenseRelation:
 
 
 def _coo_flatten(rel: CooRelation):
-    return (rel.keys, rel.values), rel.extents
+    return (rel.keys, rel.values), (
+        rel.extents,
+        rel.owner_dim,
+        rel.shard_offsets,
+    )
 
 
-def _coo_unflatten(extents: Tuple[int, ...], children) -> CooRelation:
+def _coo_unflatten(aux, children) -> CooRelation:
     keys, values = children
-    return CooRelation(keys, values, extents)
+    extents, owner_dim, shard_offsets = aux
+    return CooRelation(keys, values, extents, owner_dim, shard_offsets)
 
 
 jax.tree_util.register_pytree_node(
@@ -154,3 +180,73 @@ def to_blocked(rel: DenseRelation):
 def scalar_relation(value=1.0, dtype=jnp.float32) -> DenseRelation:
     """The one-tuple relation {(⟨⟩, value)} — loss outputs / gradient seeds."""
     return DenseRelation(jnp.asarray(value, dtype=dtype), key_arity=0)
+
+
+# ---------------------------------------------------------------------------
+# COO nnz-dimension layouts (the sharded-graph fast path)
+# ---------------------------------------------------------------------------
+
+
+def pad_coo_nnz(rel: CooRelation, target_nnz: int) -> CooRelation:
+    """Pad the nnz axis up to ``target_nnz`` rows with ``COO_PAD_KEY`` keys
+    and zero values — the pad-and-mask layout the engine emits when a
+    planned nnz sharding does not divide the row count. Padded rows are
+    inert: every key column is out of range, so gathers mask them to zero
+    and segment sums drop them."""
+    pad = target_nnz - rel.nnz
+    if pad < 0:
+        raise ValueError(
+            f"pad_coo_nnz: target {target_nnz} < nnz {rel.nnz}"
+        )
+    if pad == 0:
+        return rel
+    keys = jnp.pad(rel.keys, ((0, pad), (0, 0)), constant_values=COO_PAD_KEY)
+    values = jnp.pad(
+        rel.values, ((0, pad),) + ((0, 0),) * rel.chunk_rank
+    )
+    return CooRelation(keys, values, rel.extents, rel.owner_dim, rel.shard_offsets)
+
+
+def owner_partition(
+    rel: CooRelation, num_shards: int, dim: int = -1
+) -> CooRelation:
+    """Owner-partitioned nnz layout: sort rows by the key column ``dim``
+    (the Σ's segment key — a GCN edge's dst node), pad nnz to a multiple
+    of ``num_shards``, and record per-shard segment offsets.
+
+    Under an nnz sharding over ``num_shards`` devices, each equal shard of
+    the sorted rows then holds a contiguous owner-key range
+    (``shard_offsets[s]`` is the first owner key of shard ``s``; a shard
+    whose rows are all padding owns no segments and records the
+    one-past-the-end owner extent), so the Σ-by-owner scatter is local
+    except at range boundaries — the layout the planner's edge-cut
+    estimate (``planner.EDGE_CUT_LOCAL``) prices. Sorting happens on the
+    host (numpy): this is a data-loading step, not a traced one."""
+    if num_shards < 1:
+        raise ValueError(f"owner_partition: num_shards={num_shards} must be >= 1")
+    dim = dim % rel.key_arity
+    keys = np.asarray(rel.keys)
+    values = np.asarray(rel.values)
+    order = np.argsort(keys[:, dim], kind="stable")
+    sorted_rel = CooRelation(
+        jnp.asarray(keys[order]),
+        jnp.asarray(values[order]),
+        rel.extents,
+        owner_dim=dim,
+    )
+    padded_nnz = ((sorted_rel.nnz + num_shards - 1) // num_shards) * num_shards
+    sorted_rel = pad_coo_nnz(sorted_rel, padded_nnz)
+    per = padded_nnz // num_shards
+    owners = keys[order][:, dim]
+    end = int(rel.extents[dim])  # empty-shard sentinel: one past the last owner
+    offsets = tuple(
+        int(owners[s * per]) if s * per < len(owners) else end
+        for s in range(num_shards)
+    )
+    return CooRelation(
+        sorted_rel.keys,
+        sorted_rel.values,
+        rel.extents,
+        owner_dim=dim,
+        shard_offsets=offsets,
+    )

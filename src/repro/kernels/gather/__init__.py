@@ -1,0 +1,7 @@
+"""Row-gather kernel package: the ``gather_join`` dispatch op's
+pallas/interpret tiers (ops.py) and jnp oracle (ref.py)."""
+
+from .ops import gather_rows
+from .ref import gather_rows_ref
+
+__all__ = ["gather_rows", "gather_rows_ref"]

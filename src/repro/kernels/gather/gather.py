@@ -1,0 +1,53 @@
+"""Row-gather kernel — the edge ⋈ node side of the GCN join-aggregate.
+
+The COO gather join reads, per edge, one row of a dense relation
+(``out[e, :] = table[rows[e], :]``). A GPU engine lowers this to a plain
+random-access gather; on TPU the idiomatic lowering is a **scalar-prefetch
+DMA pipeline**: the row ids are scalar-prefetched so the BlockSpec
+index_map can schedule one HBM→VMEM row copy per grid step, and Pallas
+double-buffers the copies against the (trivial) compute.
+
+Rows must be pre-clamped to ``[0, num_rows)`` — masking of invalid
+(padding) ids happens in the ops.py wrapper, keeping the kernel a pure
+copy. The grid is one program per output row; blocking the feature dim /
+batching multiple rows per program is TPU tile tuning that lands with
+measured numbers (see ROADMAP "tier predicates from measurements").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp  # noqa: F401  (type annotations)
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(rows_ref, table_ref, o_ref):
+    # The index_map already steered this program's table block to row
+    # rows[i]; the body is the VMEM copy the DMA pipeline overlaps.
+    del rows_ref
+    o_ref[...] = table_ref[...]
+
+
+def gather_rows_pallas(
+    table: jnp.ndarray,  # (N, D)
+    rows: jnp.ndarray,   # (E,) int32 in [0, N)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    e, = rows.shape
+    n, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, rows_ref: (rows_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, rows_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, d), table.dtype),
+        interpret=interpret,
+    )(rows, table)

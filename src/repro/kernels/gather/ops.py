@@ -1,0 +1,97 @@
+"""Public wrapper for the row-gather kernel: the ``pallas``/``interpret``
+tiers of the engine's ``gather_join`` dispatch op (core/kernels.py).
+
+``gather_rows(table, rows)`` masks invalid (negative / out-of-range) row
+ids to zero rows — the COO pad-and-mask contract — and runs the
+scalar-prefetch DMA kernel (gather.py); ``use_pallas=False``
+short-circuits to the jnp oracle (ref.py).
+
+The wrapper carries a ``jax.custom_vjp`` so reverse-mode AD differentiates
+*through* the Pallas forward, and the gradient stays **in-tier**: the
+cotangent of ``table`` is the scatter-add of ``g`` by ``rows`` — exactly
+the segment-sum op — routed to the segsum kernel package under the same
+``interpret``/``use_pallas`` flags as the forward. A compiled step that
+gathers through the DMA kernel therefore back-propagates through the
+matching one-hot-matmul scatter kernel, never silently falling back to a
+different physical tier.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gather import gather_rows_pallas
+from .ref import gather_rows_ref
+
+
+def _run(table, rows, num_rows, interpret, use_pallas):
+    if not use_pallas:
+        return gather_rows_ref(table, rows)
+    if rows.shape[0] == 0:  # empty gather: zero-nnz COO guard
+        return jnp.zeros((0, table.shape[1]), dtype=table.dtype)
+    valid = (rows >= 0) & (rows < num_rows)
+    safe = jnp.clip(rows, 0, max(num_rows - 1, 0)).astype(jnp.int32)
+    out = gather_rows_pallas(table, safe, interpret=interpret)
+    return jnp.where(valid[:, None], out, jnp.zeros((), table.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _gather_rows(table, rows, num_rows, interpret, use_pallas):
+    return _run(table, rows, num_rows, interpret, use_pallas)
+
+
+def _fwd(table, rows, num_rows, interpret, use_pallas):
+    out = _run(table, rows, num_rows, interpret, use_pallas)
+    return out, rows
+
+
+def _bwd(num_rows, interpret, use_pallas, rows, g):
+    # out[e] = table[rows_e]  ⇒  dtable = Σ_e 1[rows_e == r]·g[e] — the
+    # scatter-add IS the segment-sum op; stay in the forward's tier so
+    # gradients run the same physical kernels. Invalid (padding) ids are
+    # dropped by the segsum kernels' out-of-range contract.
+    if rows.shape[0] == 0:
+        dtable = jnp.zeros((num_rows, g.shape[1]), dtype=g.dtype)
+    elif use_pallas:
+        from repro.kernels.segsum.ops import segment_sum
+
+        dtable = segment_sum(
+            g, rows, num_rows, interpret=interpret, use_pallas=True
+        )
+    else:
+        from repro.kernels.segsum.ref import segment_sum_ref
+
+        dtable = segment_sum_ref(g, rows, num_rows)
+    drows = np.zeros(rows.shape, dtype=jax.dtypes.float0)
+    return dtable, drows
+
+
+_gather_rows.defvjp(_fwd, _bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "use_pallas")
+)
+def _jitted(table, rows, interpret, use_pallas):
+    return _gather_rows(table, rows, table.shape[0], interpret, use_pallas)
+
+
+def gather_rows(
+    table: jnp.ndarray,
+    rows: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Gather rows of ``table`` (N, D) at ``rows`` (E,) on the Pallas
+    scalar-prefetch DMA kernel; ids outside ``[0, N)`` (COO padding)
+    produce zero rows. ``interpret=None`` auto-selects interpreter mode
+    off-TPU. Differentiable wrt ``table`` (custom VJP: same-tier
+    segment-sum scatter of the cotangent)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _jitted(table, rows.astype(jnp.int32), interpret, use_pallas)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the row-gather kernel."""
+
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """``out[e] = table[rows[e]]`` with out-of-range / negative row ids
+    (COO padding) masked to zero, matching the kernel wrapper's contract.
+    Natively differentiable: the VJP of the masked gather is the masked
+    scatter-add."""
+    n = table.shape[0]
+    valid = (rows >= 0) & (rows < n)
+    safe = jnp.clip(rows, 0, max(n - 1, 0))
+    return jnp.where(valid[:, None], table[safe], jnp.zeros((), table.dtype))

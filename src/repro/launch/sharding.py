@@ -150,6 +150,27 @@ def param_pspecs(param_shapes, mesh, *, fsdp: bool = True) -> Any:
     return jax.tree_util.tree_map_with_path(assign, param_shapes)
 
 
+def coo_pspecs(rel, mesh) -> Any:
+    """CooRelation-shaped PartitionSpec pytree for the nnz-sharded edge
+    layout: keys/values row (nnz) dim over the mesh's batch axes — the
+    same fold the 2-D relational planner emits for ``data:shard_nnz_*``
+    plans. For manual ``device_put`` of edge relations (benchmarks,
+    data loading); the engine derives the same layout from the plan."""
+    from repro.core.planner import fold_axes
+    from repro.core.relation import CooRelation
+
+    from .mesh import batch_axes
+
+    row = fold_axes(batch_axes(mesh))
+    return CooRelation(
+        P(row, None),
+        P(row, *([None] * (rel.values.ndim - 1))),
+        rel.extents,
+        rel.owner_dim,
+        rel.shard_offsets,
+    )
+
+
 def batch_pspecs(batch_shapes, mesh) -> Any:
     """Input batch: batch dimension over the mesh's data axes (the same
     ("pod","data") fold the 2-D relational planner emits — see

@@ -10,7 +10,10 @@ staged engine (core/engine.py): lowered once per (batch, vocab, dim)
 signature, jit-cached across steps. Under ``core.engine.use_mesh`` the
 2-D planner places the table's block axes on the ambient (data × model)
 mesh (the vocab-parallel layout of launch/sharding.py, derived from the
-plan instead of a name rule).
+plan instead of a name rule) and may shard the token-stream CooRelation's
+nnz rows — one row per position, so nnz sharding IS batch data
+parallelism — over the data axes, with the position-keyed Σ's scatter
+costed by the planner like any other collective.
 """
 
 from __future__ import annotations

@@ -11,8 +11,12 @@ Forward and backward step through the staged engine (core/engine.py):
 the program is built once, lowered per (graph-size, feature-dim)
 signature, and reused as a jitted ``Compiled`` across training steps.
 Under ``core.engine.use_mesh`` the 2-D planner places the relations on
-the ambient (data × model) mesh (CooRelation edges stay replicated until
-COO nnz-sharding lands — see ROADMAP).
+the ambient (data × model) mesh, including the edge CooRelation's nnz
+row dimension over the data axes (``data:shard_nnz_*`` plans): the
+gather join and Σ-by-dst then run per-shard with the planned scatter
+collective, so the largest array in the program — the edge list — never
+has to fit one device. ``partitioned_edges`` pre-sorts edges by dst
+(owner partition), which the planner prices at its edge-cut estimate.
 """
 
 from __future__ import annotations
@@ -28,7 +32,24 @@ from repro.core.autodiff import ra_autodiff
 from repro.core.engine import jit_execute
 from repro.core.kernels import ADD, MUL
 from repro.core.keys import L, eq_pred, identity_key, jproj
-from repro.core.relation import CooRelation, DenseRelation
+from repro.core.relation import CooRelation, DenseRelation, owner_partition
+
+
+def partitioned_edges(
+    edge_keys, edge_w, n_nodes: int, num_shards: int
+) -> CooRelation:
+    """Edge relation in the owner-partitioned nnz layout: rows sorted by
+    dst (key column 1 — the Σ-by-dst segment key) and padded to a
+    ``num_shards`` multiple, so an nnz sharding gives each shard a
+    contiguous destination range and the planner prices the scatter at
+    ``planner.EDGE_CUT_LOCAL``. Returns the CooRelation to train with —
+    its row order is the order edge-weight gradients come back in."""
+    rel = CooRelation(
+        jnp.asarray(edge_keys, jnp.int32),
+        jnp.asarray(edge_w),
+        (n_nodes, n_nodes),
+    )
+    return owner_partition(rel, num_shards, dim=1)
 
 
 @functools.cache

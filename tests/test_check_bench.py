@@ -1,0 +1,52 @@
+"""tools/check_bench.py: a malformed baseline (missing metric key) must
+fail with the named key and file, not a bare KeyError."""
+
+import importlib.util
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_module():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", REPO / "tools" / "check_bench.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_missing_metric_key_is_named(tmp_path):
+    cb = _load_module()
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    good = [{"name": "engine_overhead/x/compiled", "us_per_call": 1.0}]
+    bad = [{"name": "engine_overhead/x/compiled"}]        # no us_per_call
+    (baselines / "engine_overhead.json").write_text(json.dumps(bad))
+    (baselines / "kernel_dispatch.json").write_text(json.dumps(good))
+    (tmp_path / "BENCH_engine_overhead.json").write_text(json.dumps(good))
+    (tmp_path / "BENCH_kernel_dispatch.json").write_text(json.dumps(good))
+
+    errors = cb.check(baselines, tmp_path)
+    joined = "\n".join(errors)
+    assert "us_per_call" in joined                 # the missing key, named
+    assert "engine_overhead.json" in joined        # the offending file
+    # the well-formed suite is still checked, not aborted by the bad one
+    assert any("kernel_dispatch" in e or "no gated" in e for e in errors) or (
+        len(errors) == 1
+    )
+
+
+def test_well_formed_baselines_pass(tmp_path):
+    cb = _load_module()
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    rows = [
+        {"name": "engine_overhead/x/compiled", "us_per_call": 100.0},
+        {"name": "kernel_dispatch/engine-x/jnp", "us_per_call": 50.0},
+    ]
+    for suite in cb.SUITES:
+        (baselines / f"{suite}.json").write_text(json.dumps(rows))
+        (tmp_path / f"BENCH_{suite}.json").write_text(json.dumps(rows))
+    assert cb.check(baselines, tmp_path) == []

@@ -46,9 +46,23 @@ def _is_stable(name: str) -> bool:
     return any(p.match(name) for p in STABLE)
 
 
+class BenchFormatError(ValueError):
+    """A benchmark emission/baseline row is missing a required key."""
+
+
 def _load(path: pathlib.Path) -> Dict[str, float]:
     rows = json.loads(path.read_text())
-    return {r["name"]: float(r["us_per_call"]) for r in rows}
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        missing = [k for k in ("name", "us_per_call") if k not in r]
+        if missing:
+            raise BenchFormatError(
+                f"{path}: row {i} ({r.get('name', '<unnamed>')!r}) is "
+                f"missing metric key(s) {missing}; re-emit the suite or "
+                f"re-baseline (cp BENCH_<suite>.json benchmarks/baselines/)"
+            )
+        out[r["name"]] = float(r["us_per_call"])
+    return out
 
 
 def check(
@@ -67,8 +81,14 @@ def check(
         if not fresh_path.exists():
             errors.append(f"{suite}: fresh run missing at {fresh_path}")
             continue
-        base = _load(base_path)
-        fresh = _load(fresh_path)
+        try:
+            base = _load(base_path)
+            fresh = _load(fresh_path)
+        except BenchFormatError as e:
+            # a malformed baseline used to surface as a bare KeyError with
+            # no file or key context — fail with both instead
+            errors.append(str(e))
+            continue
         gated = {n for n in base if _is_stable(n)}
         if not gated:
             errors.append(f"{suite}: no gated (compiled-step) metrics in baseline")
