@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core import fra
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import RAEngine
+from repro.core.engine import engine_for
 from repro.core.kernels import ADD, MUL, SQUARE, SUM_CHUNK, scale_kernel
 from repro.core.keys import EMPTY_KEY, TRUE, L, eq_pred, identity_key, jproj
 from repro.core.relation import DenseRelation
@@ -106,7 +106,7 @@ def run() -> None:
             continue
         env = _env(rng, n, e, d, n_dev)
         prog = _gcn_prog(n)
-        eng = RAEngine(prog)
+        eng = engine_for(prog)
         low = eng.lower(env)
 
         lanes = {

@@ -2,8 +2,11 @@
 FRA graph (Python lowering) on every call; a staged ``Compiled`` walks it
 once at trace time and then steps through the jit cache. This measures
 both regimes on the logreg gradient program (paper §2.3) and on the
-blocked matmul, and reports steps/sec plus the engine's retrace count —
-the number of actual graph walks over the whole timed run.
+blocked matmul, plus the ``repro.Database`` session path (catalog-sourced
+env + statistics + committed-layout record per step) against the raw
+``Compiled`` step — the session's front-door overhead — and reports
+steps/sec plus the engine's retrace count — the number of actual graph
+walks over the whole timed run.
 """
 
 from __future__ import annotations
@@ -11,9 +14,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.core import compiler, fra
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import RAEngine
+from repro.core.engine import engine_for
 from repro.core.kernels import ADD, MATMUL
 from repro.core.keys import L, R, eq_pred, jproj, project_key
 from repro.core.relation import DenseRelation
@@ -50,7 +54,7 @@ def run() -> None:
         lambda: compiler.grad_eval(prog, env), iters=iters, warmup=2
     )
 
-    eng = RAEngine(prog)
+    eng = engine_for(prog)
     compiled = eng.lower(env).compile()
     compiled(env)                       # trace once
     t0 = eng.trace_count
@@ -64,6 +68,21 @@ def run() -> None:
            f"speedup={us_eager/us_staged:.2f}x")
     assert retraces == 0, "Compiled re-lowered on a fixed signature"
 
+    # ---- Database session path: catalog env + stats + layout record ----
+    # Same gradient step through the one front door; the delta vs the raw
+    # Compiled step is the session's per-call overhead (env assembly,
+    # stats snapshot, compile_auto record check).
+    db = repro.Database()
+    db.put("Rx", env["Rx"].data, keys=("row", "col"))
+    db.put("Ry", env["Ry"].data, keys=("row",))
+    db.put("theta", env["theta"].data, keys=("col",))
+    handle = db.query(logreg_query())
+    handle.step()                       # trace once
+    us_session = timeit(lambda: handle.step(), iters=iters, warmup=2)
+    record("engine_overhead/logreg-grad/session", us_session,
+           f"steps_per_s={1e6/us_session:.1f};"
+           f"overhead_vs_compiled={us_session/us_staged:.2f}x")
+
     # ---- blocked matmul forward: eager execute vs staged Compiled -------
     k4, k5 = jax.random.split(key)
     menv = {
@@ -74,7 +93,7 @@ def run() -> None:
     us_eager_mm = timeit(
         lambda: compiler.execute(mq.root, menv), iters=iters, warmup=2
     )
-    meng = RAEngine(mq)
+    meng = engine_for(mq)
     mcomp = meng.lower(menv).compile()
     mcomp(menv)                         # trace once
     t0 = meng.trace_count

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core import fra
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import RAEngine
+from repro.core.engine import engine_for
 from repro.core.kernels import (
     ADD,
     MUL,
@@ -157,7 +157,7 @@ def _bench_raw_matmul() -> None:
 
 
 def _bench_engine(tag: str, prog, env, tiers, iters: int = 10) -> None:
-    eng = RAEngine(prog)
+    eng = engine_for(prog)
     base_us, base_leaves = None, None
     for tier in tiers:
         comp = eng.lower(env, dispatch=tier).compile()
@@ -189,7 +189,7 @@ def _bench_interpret_probe() -> None:
         ("logreg", _logreg_prog(48), _logreg_env(rng, 48, 12)),
         ("gcn", _gcn_prog(16), _gcn_env(rng, 16, 40, 8)),
     ):
-        eng = RAEngine(prog)
+        eng = engine_for(prog)
         out_j, grads_j = eng.lower(env, dispatch="jnp").compile()(env)
         comp = eng.lower(env, dispatch="interpret").compile()
         out_i, grads_i = comp(env)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.data import synthetic_graph
 from repro.optim import adam_init, adam_update
 from repro.relational import gcn_conv, rel_linear
@@ -35,10 +36,27 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--mode", choices=("full", "minibatch"), default="full")
     ap.add_argument("--batch", type=int, default=1024)   # paper: B=1024
+    ap.add_argument("--mesh", default=None,
+                    help='session mesh spec, e.g. "host:2" (default: none)')
     args = ap.parse_args()
 
     g = synthetic_graph(args.nodes, args.edges, args.feat, args.labels, seed=0)
     keys, w, x = g["edge_keys"], g["edge_w"], g["x"]
+
+    # One session for the whole run: the relational ops (gcn_conv /
+    # rel_linear) plan, dispatch and distribute through it. The edge
+    # relation is registered so the catalog tracks its key-domain
+    # statistics (distinct src/dst counts, nnz, density).
+    db = repro.Database(mesh=args.mesh)
+    db.put(
+        "Edge",
+        repro.CooRelation(
+            jnp.asarray(keys, jnp.int32), jnp.asarray(w),
+            (args.nodes, args.nodes),
+        ),
+        keys=("src", "dst"),
+    )
+    print(f"catalog Edge: keys={db.schema('Edge')}  {db.stats('Edge')}")
     # learnable labels (2-hop-smoothed linear function of the features)
     rng = np.random.default_rng(0)
     proj = rng.normal(size=(args.feat, args.labels)).astype(np.float32)
@@ -80,19 +98,20 @@ def main() -> None:
     all_nodes = jnp.arange(args.nodes)
     print(f"mode={args.mode}  |V|={args.nodes} |E|={keys.shape[0]} "
           f"feat={args.feat} hidden={args.hidden}")
-    for epoch in range(args.epochs):
-        t0 = time.time()
-        if args.mode == "full":
-            params, opt, loss, acc = step(params, opt, all_nodes)
-        else:
-            perm = np.random.default_rng(epoch).permutation(args.nodes)
-            for i in range(0, args.nodes, args.batch):
-                ids = jnp.asarray(perm[i : i + args.batch])
-                params, opt, loss, acc = step(params, opt, ids)
-        dt = time.time() - t0
-        if epoch % 5 == 0 or epoch == args.epochs - 1:
-            print(f"epoch {epoch:3d}  loss {float(loss):.4f}  "
-                  f"acc {float(acc):.3f}  {dt*1e3:.0f} ms")
+    with db.activate():
+        for epoch in range(args.epochs):
+            t0 = time.time()
+            if args.mode == "full":
+                params, opt, loss, acc = step(params, opt, all_nodes)
+            else:
+                perm = np.random.default_rng(epoch).permutation(args.nodes)
+                for i in range(0, args.nodes, args.batch):
+                    ids = jnp.asarray(perm[i : i + args.batch])
+                    params, opt, loss, acc = step(params, opt, ids)
+            dt = time.time() - t0
+            if epoch % 5 == 0 or epoch == args.epochs - 1:
+                print(f"epoch {epoch:3d}  loss {float(loss):.4f}  "
+                      f"acc {float(acc):.3f}  {dt*1e3:.0f} ms")
     assert float(acc) > 0.5, "training failed to learn"
     print("done.")
 

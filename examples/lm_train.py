@@ -18,6 +18,7 @@ import time
 import jax
 import numpy as np
 
+import repro
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.data import synthetic_lm_batches
@@ -63,7 +64,10 @@ def main() -> None:
     print(f"preset={args.preset}  params={n_params/1e6:.1f}M  "
           f"layers={cfg.n_layers} d={cfg.d_model} experts={cfg.n_experts}")
 
-    step_fn = make_train_step(model, lr=args.lr)
+    # One session for the run: the relational custom_vjp ops inside the
+    # model plan/dispatch through it (pass mesh="host:2" etc. to shard).
+    db = repro.Database()
+    step_fn = make_train_step(model, lr=args.lr, database=db)
     batches = synthetic_lm_batches(cfg, args.batch, args.seq, seed=0)
     params, opt_state = state.params, state.opt_state
 

@@ -1,11 +1,14 @@
 """Quickstart: the paper's §2.3 running example, end to end — "simply load
 the data into relational tables, auto-diff the SQL, and begin training".
 
-Compile logistic-regression SQL to a functional-RA query, auto-
-differentiate it with Algorithm 2 (relational reverse mode), and run
-gradient descent where every gradient is produced by executing the
-*generated gradient query* on the chunked compiler. Prints the forward
-query plan, the generated gradient plan, and the training curve.
+Everything goes through the one front door, ``repro.Database``: load the
+relations into the catalog (``db.put`` — schemas + tracked key-domain
+statistics), compile the logistic-regression SQL against the catalog
+(``db.sql``), and train on the handle's compiled gradient step
+(``handle.step()`` — RA-autodiff + the staged engine underneath, plans
+sourced from the catalog statistics). Prints the forward query plan, the
+generated gradient plan, the planner's physical plans, the kernel
+dispatch decisions, and the training curve.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,10 +16,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import fra
+import repro
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import RAEngine
-from repro.core.relation import DenseRelation
 from repro.core.sql import compile_sql
 
 LOGREG_SQL = """
@@ -27,9 +28,9 @@ SELECT SUM(xent(pred.val, Ry.val)) FROM pred, Ry WHERE pred.row = Ry.row
 """
 
 
-def logreg_query() -> fra.Query:
+def logreg_query():
     """F_Loss from paper §2.3, compiled from SQL (F_MatMul, F_Predict,
-    F_Loss as stacked views)."""
+    F_Loss as stacked views) — standalone, for callers without a session."""
     return compile_sql(
         LOGREG_SQL,
         schema={"Rx": ("row", "col"), "theta": ("col",), "Ry": ("row",)},
@@ -40,52 +41,53 @@ def logreg_query() -> fra.Query:
 def main() -> None:
     print("=== SQL input ===")
     print(LOGREG_SQL.strip())
-    q = logreg_query()
-    print("\n=== compiled forward query (F_Loss, paper §2.3) ===")
-    print(q.pretty())
-
-    prog = ra_autodiff(q)   # Algorithm 2 → gradient query per input
-    print("\n=== RA-autodiff-generated gradient query (∂Q/∂theta) ===")
-    print(prog.grads["theta"].pretty())
 
     # synthetic separable data
     n, m = 4096, 64
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     X = jax.random.normal(k1, (n, m))
     y = (X @ jax.random.normal(k2, (m,)) > 0).astype(jnp.float32)
-    theta = jnp.zeros((m,))
 
-    # Staged pipeline (core/engine.py): the program is lowered once for
-    # this environment signature, the planner picks a physical plan per
-    # join, and the jitted Compiled step is reused every iteration.
-    env = {
-        "Rx": DenseRelation(X, 2),
-        "Ry": DenseRelation(y, 1),
-        "theta": DenseRelation(theta, 1),
-    }
-    engine = RAEngine(prog)
-    compiled = engine.lower(env).compile()
-    print("\n=== physical plans (planner.plan_query) ===")
-    for nid, plan in compiled.plans.items():
+    # The session: a catalog of named relations with schemas and tracked
+    # key-domain statistics, refreshed on every put.
+    db = repro.Database()
+    db.put("Rx", X, keys=("row", "col"))
+    db.put("Ry", y, keys=("row",))
+    db.put("theta", jnp.zeros((m,)), keys=("col",))
+    print("\n=== catalog ===")
+    for name in ("Rx", "Ry", "theta"):
+        print(f"{name}: keys={db.schema(name)}  {db.stats(name)}")
+
+    handle = db.sql(LOGREG_SQL, wrt=("theta",))
+    print("\n=== compiled forward query (F_Loss, paper §2.3) ===")
+    print(handle.query.pretty())
+    print("\n=== RA-autodiff-generated gradient query (∂Q/∂theta) ===")
+    print(ra_autodiff(handle.query).grads["theta"].pretty())
+
+    # One compiled gradient step — lowered once for this catalog
+    # signature, planned from the catalog statistics, jit-cached across
+    # iterations (committed layouts auto-threaded: no plan-flapping).
+    loss, grads = handle.step()
+    print("\n=== physical plans (planner.plan_query, catalog statistics) ===")
+    for nid, plan in handle.plans.items():
         print(f"join #{nid}: {plan.kind}  costs={ {k: f'{v:.0f}' for k, v in plan.costs.items()} }")
 
     # Kernel dispatch (docs/kernels.md): each hot op was resolved against
     # the registry at lowering time — pallas on TPU, the jnp lowering by
-    # default on CPU; pass dispatch="ref"/"interpret" to engine.lower to
+    # default on CPU; pass dispatch="ref"/"interpret" to Database() to
     # route through the kernel packages' CPU tiers instead.
-    print(f"\n=== kernel dispatch ({compiled.dispatch.describe()}) ===")
-    for site, tier in sorted(compiled.resolutions.items()):
+    print("\n=== kernel dispatch ===")
+    for site, tier in sorted(handle.resolutions.items()):
         print(f"{site}  ->  {tier}")
 
     print("\n=== training (gradient = compiled gradient query) ===")
     for i in range(50):
-        loss, grads = compiled(env)
+        loss, grads = handle.step()
         # loss is summed over n tuples — scale the step accordingly
-        theta = env["theta"].data - (1.0 / n) * grads["theta"].data
-        env["theta"] = DenseRelation(theta, 1)
+        theta = db.get("theta").data - (1.0 / n) * grads["theta"].data
+        db.put("theta", theta)   # refreshes the catalog entry + stats
         if i % 5 == 0 or i == 49:
             print(f"step {i:3d}   loss {float(loss.data)/n:.4f}")
-    print(f"graph lowerings over 50 steps: {engine.trace_count}")
 
     acc = float(jnp.mean(((X @ theta) > 0).astype(jnp.float32) == y))
     print(f"\ntrain accuracy: {acc:.3f}")

@@ -1,6 +1,8 @@
-"""Batched serving example: prefill a batch of prompts, then decode tokens
-autoregressively from the KV cache — the `serve_step` the decode dry-run
-shapes lower (one new token against a seq_len cache).
+"""Batched serving example: prefill a batch of prompts through the
+session-backed ``BatchServer`` (one compiled executable per (batch, seq)
+bucket in the ``repro.Database`` cache, warmed up before traffic), then
+decode tokens autoregressively from the KV cache — the `serve_step` the
+decode dry-run shapes lower (one new token against a seq_len cache).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--arch gemma2-9b]
       [--batch 4] [--prompt-len 32] [--gen 16]
@@ -13,10 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import ARCH_IDS, get_config
 from repro.data import batch_for
 from repro.models import build_model
-from repro.serving import make_decode_step, make_prefill_step
+from repro.serving import BatchServer, make_decode_step
 
 
 def main() -> None:
@@ -33,14 +36,27 @@ def main() -> None:
     rng = np.random.default_rng(0)
 
     cache_len = args.prompt_len + (cfg.vis_seq or 0) + args.gen
-    prefill = jax.jit(make_prefill_step(model, cache_len))
-    decode = jax.jit(make_decode_step(model))
+    db = repro.Database(max_cache_entries=4)
+    server = BatchServer(
+        model, cache_len, db=db,
+        buckets=[(args.batch, args.prompt_len)],
+    )
+    server.warmup(
+        params,
+        batch_fn=lambda b, s: {
+            k: (jnp.zeros_like(v) if hasattr(v, "shape") else v)
+            for k, v in batch_for(cfg, b, s, np.random.default_rng(1)).items()
+            if k != "labels"
+        },
+    )
+    decode = jax.jit(make_decode_step(model, db=db))
 
     batch = batch_for(cfg, args.batch, args.prompt_len, rng)
     batch.pop("labels", None)
 
     t0 = time.time()
-    logits, caches = prefill(params, batch)
+    logits, caches = server.prefill(params, batch)
+    print(f"serving cache after warmup+prefill: {server.cache_stats}")
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (B, 1) greedy
     t_prefill = time.time() - t0
     print(f"arch={args.arch} (reduced)  batch={args.batch}  "

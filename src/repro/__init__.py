@@ -1,0 +1,64 @@
+"""repro: auto-differentiation of relational computations (ICML 2023),
+grown toward a production-scale JAX system.
+
+The one front door is the **Database session API**::
+
+    import repro
+
+    db = repro.Database()
+    db.put("Rx", X, keys=("row", "col"))
+    db.put("theta", theta, keys=("col",))
+    handle = db.sql(LOGREG_SQL, wrt=("theta",))
+    loss, grads = handle.step()
+
+See docs/session.md for the quickstart, the catalog/statistics
+semantics, and the migration table from the deprecated engine-level
+front door (``RAEngine`` / ``jit_execute`` / ``use_mesh``).
+
+Exports are resolved lazily (PEP 562) so ``import repro`` stays free of
+jax device initialization.
+"""
+
+from typing import TYPE_CHECKING
+
+_LAZY = {
+    "Database": ("repro.core.session", "Database"),
+    "QueryHandle": ("repro.core.session", "QueryHandle"),
+    "CatalogError": ("repro.core.session", "CatalogError"),
+    "current": ("repro.core.session", "current"),
+    "DenseRelation": ("repro.core.relation", "DenseRelation"),
+    "CooRelation": ("repro.core.relation", "CooRelation"),
+    "RelationStats": ("repro.core.planner", "RelationStats"),
+    "SQLError": ("repro.core.sql", "SQLError"),
+    "BatchServer": ("repro.serving.serve", "BatchServer"),
+}
+
+__all__ = sorted(_LAZY)
+
+if TYPE_CHECKING:  # pragma: no cover — static analyzers only
+    from repro.core.planner import RelationStats  # noqa: F401
+    from repro.core.relation import CooRelation, DenseRelation  # noqa: F401
+    from repro.core.session import (  # noqa: F401
+        CatalogError,
+        Database,
+        QueryHandle,
+        current,
+    )
+    from repro.core.sql import SQLError  # noqa: F401
+    from repro.serving.serve import BatchServer  # noqa: F401
+
+
+def __getattr__(name):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        ) from None
+    import importlib
+
+    return getattr(importlib.import_module(module), attr)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

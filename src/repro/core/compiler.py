@@ -773,7 +773,8 @@ def execute(
     """Eager execution: the engine's eager mode on an anonymous graph —
     re-walks the graph on every call, no engine registered (callers often
     build throwaway graphs; interning them would only pin memory). Use
-    ``RAEngine(...).lower(env).compile(...)`` for the cached jit path.
+    the ``repro.Database`` session (``db.query(...)`` /
+    ``db.execute(...)``) for the cached jit path.
 
     ``dispatch`` accepts anything ``kernels.make_table`` does (a tier
     name, a {op: tier} dict, a DispatchTable); None keeps the backend
@@ -818,8 +819,8 @@ def grad_eval(
 ) -> Tuple[AnyRel, Dict[str, AnyRel]]:
     """Execute a GradientProgram (autodiff.py) on the compiled path:
     chunked forward with cache, then each gradient query graph. Thin
-    wrapper over the engine's eager mode; the staged equivalent is
-    ``RAEngine(prog).lower(env).compile(...)``. ``dispatch`` steers the
+    wrapper over the engine's eager mode; the staged equivalent is a
+    ``repro.Database`` handle's ``step()``. ``dispatch`` steers the
     kernel tier of both the forward and every gradient graph, so the
     gradient queries differentiate *through* whatever physical forward
     (Pallas included) the table selects."""

@@ -62,6 +62,11 @@ AnyRel = Union[DenseRelation, CooRelation]
 Env = Dict[str, AnyRel]
 Program = Union[fra.Query, fra.Node, GradientProgram]
 
+#: per-Lowered bound on retained Compiled executables (LRU): generous for
+#: real mesh/donate/stats-bucket churn, small enough that key-churning
+#: callers cannot accrete XLA executables without bound.
+_MAX_COMPILED = 64
+
 
 class ShardFallbackWarning(UserWarning):
     """A planned sharding could not be emitted and the relation fell back
@@ -83,8 +88,39 @@ class ShardFallbackWarning(UserWarning):
 class ReshardWarning(UserWarning):
     """``Compiled.__call__`` moved committed input bytes to the planned
     layout via device_put — an all-to-all the plan did not account for.
-    Emitted once per Compiled; see ``Compiled.reshard_stats`` and fold the
-    cost into planning with ``compile(committed=...)``."""
+    Structured (carries the relation name and the bytes moved) and
+    emitted once per *(cache entry, relation)*, so a second offending
+    relation is reported too instead of being swallowed by the first.
+    See ``Compiled.reshard_stats``; fold the cost into planning with
+    ``compile(committed=...)`` or let ``compile_auto`` / the ``Database``
+    session thread it automatically."""
+
+    def __init__(self, relation: str, bytes_moved: int):
+        self.relation = relation
+        self.bytes_moved = bytes_moved
+        super().__init__(
+            f"relation {relation!r}: Compiled step resharded {bytes_moved} "
+            f"committed input bytes to the planned layout (an all-to-all "
+            f"the plan did not cost); pass committed= layouts to compile() "
+            f"— or step through repro.Database, which auto-threads them — "
+            f"to fold it into the plan. See Compiled.reshard_stats."
+        )
+
+
+def _warn_shim(old: str, new: str, *, stacklevel: int = 3) -> None:
+    """Deprecation warning for the pre-session front-door API. The
+    warning is attributed to the *caller's* module, so the CI deprecation
+    lane (-W error::DeprecationWarning scoped to repro internals) proves
+    no in-repo code path still uses the shim while out-of-repo callers
+    get one release of grace."""
+    warnings.warn(
+        f"{old} is deprecated — use the repro.Database session API "
+        f"({new}) instead; this shim will be removed one release after "
+        f"the session API landed (see docs/session.md for the migration "
+        f"table)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +159,27 @@ def env_signature(env: Env, seed: Optional[AnyRel] = None) -> Tuple:
     if seed is not None:
         sig += (_rel_signature("__seed_arg", seed),)
     return sig
+
+
+def _stats_key(stats) -> Optional[Tuple]:
+    """Hashable snapshot key for a {name: RelationStats} dict (the stats
+    part of a Compiled cache key). Counts are quantized to powers of two
+    (``RelationStats.quantized``): statistics jitter across refreshes of
+    the same-shaped relation lands on the same key — and therefore the
+    same cached plan — while an order-of-magnitude shift re-plans."""
+    if not stats:
+        return None
+    return tuple(sorted((n, st.quantized()) for n, st in stats.items()))
+
+
+def _norm_spec(spec) -> Tuple:
+    """PartitionSpec normalized for layout comparison: trailing
+    replicated dims dropped, so ``P('data')`` and ``P('data', None)``
+    describe the same placement."""
+    t = tuple(spec) if spec is not None else ()
+    while t and t[-1] is None:
+        t = t[:-1]
+    return t
 
 
 def _abstract(rel):
@@ -191,7 +248,9 @@ class Compiled:
             "bytes_moved": 0,
             "last_call_bytes": 0,
         }
-        self._reshard_warned = False
+        #: relations already warned about — ReshardWarning fires once per
+        #: (cache entry, relation), not once per cache entry.
+        self._reshard_warned: set = set()
         # flattened target leaves per relation, precomputed so the per-call
         # accounting never re-walks the sharding pytrees
         self._reshard_targets = (
@@ -255,12 +314,29 @@ class Compiled:
                     out[name] = dims_of(rel.values.spec)
         return out
 
-    def _count_reshard_bytes(self, env: Env) -> int:
-        """Bytes of *committed* input arrays whose layout differs from the
-        planned in_sharding — the silent all-to-all device_put pays.
-        Uncommitted arrays place for free and cost only an attribute
-        probe; the target leaves are precomputed at compile time."""
-        moved = 0
+    def planned_spec(self, name: str) -> Optional[P]:
+        """The PartitionSpec this executable places relation ``name``'s
+        payload array at (a DenseRelation's ``data`` / a CooRelation's
+        ``values``) — the layout a ``committed_layouts``-style probe of
+        this step's *inputs after placement* would report. ``compile_auto``
+        compares it against an env's committed layouts to decide whether a
+        recorded plan still applies without any rechunk."""
+        if self.in_shardings is None:
+            return self.input_specs.get(name)
+        for shards in self.in_shardings:
+            rel = shards.get(name)
+            if rel is not None:
+                sh = rel.data if isinstance(rel, DenseRelation) else rel.values
+                return sh.spec
+        return None
+
+    def _count_reshard_bytes(self, env: Env) -> Dict[str, int]:
+        """Per-relation bytes of *committed* input arrays whose layout
+        differs from the planned in_sharding — the silent all-to-all
+        device_put pays. Uncommitted arrays place for free and cost only
+        an attribute probe; the target leaves are precomputed at compile
+        time."""
+        moved: Dict[str, int] = {}
         for name, targets in self._reshard_targets.items():
             rel = env.get(name)
             if rel is None:
@@ -276,7 +352,7 @@ class Compiled:
                 except Exception:
                     same = cur == sh
                 if not same:
-                    moved += int(arr.nbytes)
+                    moved[name] = moved.get(name, 0) + int(arr.nbytes)
         return moved
 
     def _padded(self, env: Env) -> Env:
@@ -319,7 +395,8 @@ class Compiled:
             # Reshard accounting runs on the *pre-pad* env: padding makes
             # fresh (uncommitted) arrays, which would hide a committed
             # input's layout mismatch from the stats.
-            moved = self._count_reshard_bytes(env)
+            moved_by_rel = self._count_reshard_bytes(env)
+            moved = sum(moved_by_rel.values())
         env = self._padded(env)
         donated = {k: env[k] for k in self.donate_names}
         kept = {k: v for k, v in env.items() if k not in self.donate_names}
@@ -338,18 +415,11 @@ class Compiled:
             if moved:
                 stats["resharded_calls"] += 1
                 stats["bytes_moved"] += moved
-                if not self._reshard_warned:
-                    self._reshard_warned = True
-                    warnings.warn(
-                        ReshardWarning(
-                            f"Compiled step resharded {moved} committed "
-                            f"input bytes to the planned layout (an "
-                            f"all-to-all the plan did not cost); pass "
-                            f"committed= layouts to compile() to fold it "
-                            f"into the plan. See Compiled.reshard_stats."
-                        ),
-                        stacklevel=2,
-                    )
+                for name, nbytes in moved_by_rel.items():
+                    if name in self._reshard_warned:
+                        continue  # already reported for this cache entry
+                    self._reshard_warned.add(name)
+                    warnings.warn(ReshardWarning(name, nbytes), stacklevel=2)
             donated = jax.device_put(donated, sh_don)
             kept = jax.device_put(kept, sh_kept)
         out = self._jitted(donated, kept, seed)
@@ -420,7 +490,14 @@ class Lowered:
         self.out_shape = out_shape
         #: op[site] → tier decisions recorded during the lowering walk.
         self.resolutions = resolutions
-        self._compiled: Dict[Tuple, Compiled] = {}
+        #: LRU-bounded: a Compiled holds an XLA executable, and callers
+        #: that churn cache keys (committed layouts, stats buckets) must
+        #: not accrete executables forever. Evicted entries simply
+        #: recompile on next use; callers keep their own references.
+        self._compiled: "OrderedDict[Tuple, Compiled]" = OrderedDict()
+        #: compile_auto's plan record: per (mesh, donate, …) base key the
+        #: Compiled whose committed-layout plan the catalog stands by.
+        self._auto: "OrderedDict[Tuple, Compiled]" = OrderedDict()
 
     def eager(self, env: Env, seed: Optional[AnyRel] = None):
         """Un-jitted execution (re-walks the graph; debugging only)."""
@@ -435,6 +512,7 @@ class Lowered:
         mem_budget: float = planner.DEFAULT_MEM_BUDGET,
         n_devices: Optional[int] = None,
         committed: Optional[Dict[str, P]] = None,
+        stats: Optional[Dict[str, planner.RelationStats]] = None,
     ) -> Compiled:
         """plan_query → in_shardings → jax.jit.
 
@@ -462,6 +540,11 @@ class Lowered:
         a device-layout rechunk, instead of ``Compiled.__call__`` paying
         the all-to-all silently (it still counts such moves on
         ``Compiled.reshard_stats``).
+        ``stats`` maps relation names to tracked ``planner.RelationStats``
+        (a ``Database`` catalog snapshot): the planner then replaces its
+        Agg-size / edge-cut heuristics with measured key-domain
+        statistics. The snapshot is part of the compile cache key —
+        refreshed statistics re-plan, identical ones hit the cache.
         """
         donate = tuple(sorted(donate))
         geo = (
@@ -480,9 +563,14 @@ class Lowered:
             if committed
             else None
         )
-        key = (mesh, axis, donate, mem_budget, n_devices, geo, committed_key)
+        stats_key = _stats_key(stats)
+        key = (
+            mesh, axis, donate, mem_budget, n_devices, geo, committed_key,
+            stats_key,
+        )
         hit = self._compiled.get(key)
         if hit is not None:
+            self._compiled.move_to_end(key)
             return hit
 
         # --- plan: the distribution planner picks a JoinPlan per join ----
@@ -496,6 +584,7 @@ class Lowered:
             mem_budget=mem_budget,
             geometry=geo,
             committed=committed,
+            stats=stats,
         )
         input_specs = planner.input_pspecs(fwd_query, plans)
 
@@ -555,6 +644,60 @@ class Lowered:
             pad_nnz,
         )
         self._compiled[key] = compiled
+        while len(self._compiled) > _MAX_COMPILED:
+            self._compiled.popitem(last=False)
+        return compiled
+
+    def compile_auto(
+        self,
+        env: Env,
+        *,
+        mesh=None,
+        axis: Optional[str] = None,
+        donate: Tuple[str, ...] = (),
+        mem_budget: float = planner.DEFAULT_MEM_BUDGET,
+        stats: Optional[Dict[str, planner.RelationStats]] = None,
+    ) -> Compiled:
+        """``compile`` with committed layouts auto-threaded and a
+        **plan-stability guarantee** — the PR-4 follow-up ("auto-thread
+        committed layouts through jit_execute without plan-flapping").
+
+        The committed layouts of ``env``'s arrays are derived per call
+        (``committed_layouts``) and folded into planning, but the record
+        of the plan last committed to is kept here: when every committed
+        input already sits at that plan's own placement — the steady
+        state once a step's outputs feed the next call — the recorded
+        ``Compiled`` is returned as-is. First and later calls therefore
+        produce the identical plan (bit-identical ``Compiled.plans``, the
+        same executable, ``reshard_stats`` flat at zero moved bytes)
+        instead of flapping between a no-committed and an all-committed
+        plan. Only inputs committed to a genuinely *different* layout —
+        an upstream producer changed its placement — trigger a re-plan,
+        which then charges the rechunk and becomes the new record.
+
+        This is the compile entry the ``Database`` session and the
+        relational operator layer step through."""
+        donate = tuple(sorted(donate))
+        base = (mesh, axis, donate, mem_budget, _stats_key(stats))
+        committed = _committed_layouts(env) if mesh is not None else {}
+        prev = self._auto.get(base)
+        if prev is not None and all(
+            _norm_spec(prev.planned_spec(name)) == _norm_spec(spec)
+            for name, spec in committed.items()
+        ):
+            self._auto.move_to_end(base)
+            return prev
+        compiled = self.compile(
+            mesh=mesh,
+            axis=axis,
+            donate=donate,
+            mem_budget=mem_budget,
+            committed=committed or None,
+            stats=stats,
+        )
+        self._auto[base] = compiled
+        while len(self._auto) > _MAX_COMPILED:
+            self._auto.popitem(last=False)
         return compiled
 
     @staticmethod
@@ -629,9 +772,27 @@ class Lowered:
 
 class RAEngine:
     """Staged executor for an FRA query, bare gradient-graph root, or
-    GradientProgram. Holds the lowering cache and the trace counter."""
+    GradientProgram. Holds the lowering cache and the trace counter.
+
+    Direct construction is a deprecated shim over the ``repro.Database``
+    session API (one release of grace): sessions own the engine registry,
+    the catalog statistics the planner reads, and the committed-layout
+    record — ``db.query(...)`` / ``db.sql(...)`` are the front door. The
+    class itself remains the internal staged executor underneath."""
 
     def __init__(self, program: Program, *, fuse_join_agg: bool = True):
+        _warn_shim("RAEngine(...)", "db.query(...) / db.sql(...)")
+        self._init(program, fuse_join_agg)
+
+    @classmethod
+    def _create(cls, program: Program, *, fuse_join_agg: bool = True):
+        """Internal constructor (no deprecation warning) — the session /
+        ``engine_for`` path."""
+        self = object.__new__(cls)
+        self._init(program, fuse_join_agg)
+        return self
+
+    def _init(self, program: Program, fuse_join_agg: bool) -> None:
         self.source = program
         self.fuse_join_agg = fuse_join_agg
         #: number of actual FRA-graph walks (eager calls + jit traces).
@@ -763,20 +924,12 @@ _MESH_STACK: "contextvars.ContextVar[Tuple[Any, ...]]" = contextvars.ContextVar(
 
 
 @contextlib.contextmanager
-def use_mesh(mesh):
-    """Make ``mesh`` the default mesh of every ``jit_execute`` call in the
-    block — the canonical way to run the relational operator layer
-    (``rel_matmul``, ``gcn_conv``, ``rel_embed``) distributed, since the
-    ``custom_vjp`` wrappers expose no mesh argument of their own.
-
-    ``mesh`` is a jax Mesh or a ``launch/mesh.resolve_mesh`` spec string
-    (``"host"``, ``"host:<model>"``, ``"production"``,
-    ``"production:multipod"``), so ``launch/mesh.make_host_mesh`` /
-    ``make_production_mesh`` are the entry points either way::
-
-        with use_mesh("host:2"):
-            y = rel_matmul(x, w)      # planned + sharded on the host mesh
-    """
+def _use_mesh(mesh):
+    """Internal ambient-mesh context (no deprecation warning): pushes
+    ``mesh`` — a jax Mesh or a ``launch/mesh.resolve_mesh`` spec string —
+    onto the stack ``default_mesh`` reads. ``Database.activate`` uses
+    this to make the session's active mesh ambient for the relational
+    operator layer."""
     if isinstance(mesh, str):
         from repro.launch.mesh import resolve_mesh
 
@@ -788,13 +941,34 @@ def use_mesh(mesh):
         _MESH_STACK.reset(token)
 
 
+def use_mesh(mesh):
+    """Deprecated shim: make ``mesh`` the ambient mesh of every staged
+    execution in the block. The session API owns the active mesh now —
+    ``with repro.Database(mesh="host:2").activate():`` is the one way to
+    run the relational operator layer (``rel_matmul``, ``gcn_conv``,
+    ``rel_embed``) distributed::
+
+        with use_mesh("host:2"):      # deprecated
+            y = rel_matmul(x, w)
+
+        with repro.Database(mesh="host:2").activate():   # session API
+            y = rel_matmul(x, w)
+    """
+    # Not a @contextmanager itself: warning at *call* time keeps the
+    # caller's module attribution (a generator would attribute the
+    # warning to contextlib's __enter__, hiding it from the CI
+    # deprecation gate's repro-module filter).
+    _warn_shim('use_mesh(mesh)', 'Database(mesh=...).activate()')
+    return _use_mesh(mesh)
+
+
 def default_mesh():
     """The innermost ``use_mesh`` mesh, or None."""
     stack = _MESH_STACK.get()
     return stack[-1] if stack else None
 
 
-def committed_layouts(env: Env) -> Dict[str, P]:
+def _committed_layouts(env: Env) -> Dict[str, P]:
     """PartitionSpec per relation whose arrays are *committed* to a
     NamedSharding layout (outputs of earlier compiled steps; explicitly
     device_put inputs) — the dict ``Lowered.compile(committed=...)``
@@ -813,20 +987,75 @@ def committed_layouts(env: Env) -> Dict[str, P]:
     return out
 
 
+def committed_layouts(env: Env) -> Dict[str, P]:
+    """Deprecated shim over the session's automatic committed-layout
+    threading: ``Lowered.compile_auto`` (and every ``Database`` step)
+    derives and folds these layouts per call, so manual derivation is no
+    longer needed."""
+    _warn_shim("committed_layouts(env)", "db.query(...) auto-threads layouts")
+    return _committed_layouts(env)
+
+
 def engine_for(program: Program, *, fuse_join_agg: bool = True) -> RAEngine:
     """Engine per (program identity, fuse flag), LRU-bounded. The engine
     holds a strong reference to the program, so the id key cannot be
-    recycled while the entry lives."""
+    recycled while the entry lives. This is the internal registry the
+    ``Database`` session steps through."""
     key = (id(program), fuse_join_agg)
     eng = _ENGINES.get(key)
     if eng is not None and eng.source is program:
         _ENGINES.move_to_end(key)
         return eng
-    eng = RAEngine(program, fuse_join_agg=fuse_join_agg)
+    eng = RAEngine._create(program, fuse_join_agg=fuse_join_agg)
     _ENGINES[key] = eng
     while len(_ENGINES) > _MAX_ENGINES:
         _ENGINES.popitem(last=False)
     return eng
+
+
+def _trace_clean() -> bool:
+    """True outside any active jax trace. Meshes are only compiled
+    against at top level: an outer jit/grad's in-flight shardings would
+    fight the planner's, so sharding is left to propagate from the
+    traced operands instead. The one place this probe lives — the
+    session's mesh resolution reuses it."""
+    try:
+        return jax.core.trace_state_clean()
+    except AttributeError:  # no trace-state probe on this jax:
+        return False  # be safe, skip the ambient mesh
+
+
+def _ambient_mesh():
+    """The mesh a top-level staged execution should compile against: the
+    innermost ambient mesh, or None under an active trace."""
+    return default_mesh() if _trace_clean() else None
+
+
+def _staged_execute(
+    program: Program,
+    env: Env,
+    seed: Optional[AnyRel] = None,
+    *,
+    mesh=None,
+    donate: Tuple[str, ...] = (),
+    fuse_join_agg: bool = True,
+    dispatch=None,
+    stats: Optional[Dict[str, planner.RelationStats]] = None,
+    mem_budget: float = planner.DEFAULT_MEM_BUDGET,
+):
+    """lower → plan → compile → run in one call, with every stage cached:
+    per-program engine, per-(signature, dispatch-table) Lowered, per-mesh
+    ``compile_auto`` record (committed layouts folded without
+    plan-flapping). The internal staged hot path ``Database.execute`` and
+    the relational operator layer step through; ``mesh=None`` picks up
+    the ambient mesh (session / legacy ``use_mesh``) outside traces."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    eng = engine_for(program, fuse_join_agg=fuse_join_agg)
+    compiled = eng.lower(env, seed, dispatch=dispatch).compile_auto(
+        env, mesh=mesh, donate=donate, stats=stats, mem_budget=mem_budget
+    )
+    return compiled(env, seed)
 
 
 def jit_execute(
@@ -839,25 +1068,19 @@ def jit_execute(
     fuse_join_agg: bool = True,
     dispatch=None,
 ):
-    """lower → plan → compile → run in one call, with every stage cached:
-    per-program engine, per-(signature, dispatch-table) Lowered, per-mesh
-    Compiled. This is the staged hot path the relational operator layer
-    steps through. ``dispatch`` steers the kernel tier (see
-    ``kernels.make_table``); ``mesh=None`` picks up the ambient
-    ``use_mesh`` mesh, so the wrappers distribute without new arguments.
-    The ambient mesh only applies at top level: under an active trace
-    (an outer jit / grad) the planner's in_shardings would fight the
-    shardings already carried by the traced operands, so sharding is
-    left to propagate from them instead."""
-    if mesh is None:
-        try:
-            trace_clean = jax.core.trace_state_clean()
-        except AttributeError:  # no trace-state probe on this jax:
-            trace_clean = False  # be safe, skip the ambient mesh
-        if trace_clean:
-            mesh = default_mesh()
-    eng = engine_for(program, fuse_join_agg=fuse_join_agg)
-    compiled = eng.lower(env, seed, dispatch=dispatch).compile(
-        mesh=mesh, donate=donate
+    """Deprecated shim: the one-call staged execution now lives on the
+    session — ``repro.Database`` resolves the mesh, dispatch table and
+    catalog statistics itself (``db.execute`` for anonymous environments,
+    ``db.query``/``db.sql`` for catalog-backed ones). Unlike the historical
+    behavior this shim threads committed layouts via ``compile_auto``, so
+    repeated calls on a committed-layout env no longer silently reshard."""
+    _warn_shim("jit_execute(...)", "db.execute(...) / db.query(...)")
+    return _staged_execute(
+        program,
+        env,
+        seed,
+        mesh=mesh,
+        donate=donate,
+        fuse_join_agg=fuse_join_agg,
+        dispatch=dispatch,
     )
-    return compiled(env, seed)

@@ -46,12 +46,74 @@ from .relation import CooRelation, DenseRelation
 #: multi-pod production mesh folds ("pod", "data") onto one relation dim.
 DATA_AXIS_NAMES = ("pod", "data")
 
-#: edge-cut estimate for the Σ-over-COO scatter when the edge relation is
-#: owner-partitioned on the Σ's segment key (relation.owner_partition):
+#: fallback edge-cut estimate for the Σ-over-COO scatter when the edge
+#: relation is owner-partitioned on the Σ's segment key
+#: (relation.owner_partition) but no tracked statistics are available:
 #: each shard then owns a contiguous segment range, so only boundary-
-#: crossing contributions move. 1/8 mirrors the planner's per-dropped-key
-#: Agg heuristic; both want tracked key-domain statistics (ROADMAP).
+#: crossing contributions move. With a catalog (core/session.py) the
+#: planner replaces this constant by a measured fraction derived from the
+#: relation's distinct-owner-key count; 1/8 mirrors the legacy
+#: per-dropped-key Agg heuristic and is kept as the stats-less fallback.
 EDGE_CUT_LOCAL = 0.125
+
+
+@dataclass(frozen=True)
+class RelationStats:
+    """Tracked key-domain statistics for one relation — what a database
+    catalog stores and the optimizer consults per query. Produced by
+    ``relation.measure_stats`` (refreshed on ``Database.put``), consumed
+    by ``plan_query(stats=...)``:
+
+    * ``distinct`` — distinct key values per key column. Replaces the
+      1/8-per-dropped-key Agg output estimate (a Σ dropping key column
+      ``i`` reduces the child by ``distinct[i]``) and prices the
+      Σ-over-COO scatter's edge cut from the owner column's real domain.
+    * ``extents`` — declared key-domain extents per key column (the
+      dense grid shape / COO extents).
+    * ``nnz`` — live (non-padded) tuple count; for a DenseRelation this
+      is the full grid size.
+    * ``density`` — ``nnz / prod(extents)``; 1.0 for dense grids.
+
+    Frozen and tuple-valued so a stats snapshot is hashable — it is part
+    of the ``Lowered.compile`` cache key."""
+
+    distinct: Tuple[int, ...]
+    extents: Tuple[int, ...]
+    nnz: int
+    density: float = 1.0
+
+    def quantized(self) -> "RelationStats":
+        """Counts bucketed to powers of two (extents kept exact) — the
+        form compile cache *keys* use, so per-batch statistics jitter
+        (e.g. a re-sampled edge set whose distinct counts wobble a few
+        percent) does not re-plan and re-jit every step. Planning itself
+        always uses the raw statistics; only key identity is coarse."""
+
+        def q(x: int) -> int:
+            x = int(x)
+            return x if x <= 1 else 1 << (x - 1).bit_length()
+
+        nnz = q(self.nnz)
+        size = 1
+        for e in self.extents:
+            size *= int(e)
+        return RelationStats(
+            distinct=tuple(q(d) for d in self.distinct),
+            extents=self.extents,
+            nnz=nnz,
+            density=(nnz / size) if size else 0.0,
+        )
+
+    def edge_cut(self, owner_dim: int, num_shards: int) -> float:
+        """Estimated non-local fraction of an owner-partitioned Σ-scatter
+        over ``num_shards`` data shards: each shard owns a contiguous
+        range of the ``distinct[owner_dim]`` segment keys, so only the
+        ≤ ``num_shards - 1`` boundary-straddling segments move. A skewed
+        (small) owner domain pushes this toward the full scatter."""
+        if num_shards <= 1:
+            return 0.0
+        owners = max(1, int(self.distinct[owner_dim]))
+        return min(1.0, float(num_shards - 1) / float(owners))
 
 
 def fold_axes(axes: Tuple[str, ...]):
@@ -233,6 +295,8 @@ def plan_join(
     coo_sides: Tuple[bool, bool] = (False, False),
     coo_local: Tuple[bool, bool] = (False, False),
     committed_dims: Tuple[Optional[Dict], Optional[Dict]] = (None, None),
+    coo_edge_cut: Tuple[Optional[float], Optional[float]] = (None, None),
+    sum_out_stat: bool = False,
 ) -> JoinPlan:
     """Pick the cheapest *feasible* physical plan by bytes moved per
     device, exactly the way the paper describes the database optimizer
@@ -269,6 +333,14 @@ def plan_join(
     be committed to (None = unknown). A candidate that wants a side
     pre-sharded on a different dim pays that side's all-to-all, instead
     of ``Compiled.__call__`` paying it silently per step.
+
+    ``coo_edge_cut`` overrides the scatter's edge-cut *fraction* per COO
+    side with a catalog-derived estimate (``RelationStats.edge_cut``);
+    ``None`` falls back to the stats-less heuristic (``EDGE_CUT_LOCAL``
+    when ``coo_local``, the full scatter otherwise). ``sum_out_stat``
+    marks ``sum_out_bytes`` as catalog-backed: the defensive dense-side
+    cap on the segment-grid estimate is then skipped — the statistics
+    already bound the Σ output by the real key domain.
     """
     geo = geometry or MeshGeometry.single(n_devices)
     n_model = max(1, geo.model_size)
@@ -303,15 +375,22 @@ def plan_join(
         frac_d = (geo.data_size - 1) / geo.data_size
         sum_out = out_bytes if sum_out_bytes is None else sum_out_bytes
 
-        def _scatter(dense_bytes: float, local: bool) -> float:
+        def _scatter(dense_bytes: float, local: bool, cut: Optional[float]) -> float:
             """psum_scatter of the Σ-over-COO segment grid. Without an
-            enclosing Σ the output stays nnz-aligned (no collective). The
-            segment grid is bounded by the gathered dense side, which caps
-            the post-Agg heuristic."""
+            enclosing Σ the output stays nnz-aligned (no collective). A
+            stats-backed ``sum_out`` is trusted as-is; the heuristic one
+            is bounded by the gathered dense side, which caps the
+            post-Agg guess. ``cut`` is the catalog edge-cut fraction,
+            falling back to the EDGE_CUT_LOCAL constant."""
             if sum_out_bytes is None:
                 return 0.0
-            est = min(sum_out, dense_bytes) if dense_bytes > 0 else sum_out
-            return est * frac_d * (EDGE_CUT_LOCAL if local else 1.0)
+            if sum_out_stat:
+                est = sum_out
+            else:
+                est = min(sum_out, dense_bytes) if dense_bytes > 0 else sum_out
+            if cut is None:
+                cut = EDGE_CUT_LOCAL if local else 1.0
+            return est * frac_d * cut
 
         # feasibility mirrors the model axis: a candidate must fit every
         # relation it replicates within the per-device budget
@@ -323,7 +402,7 @@ def plan_join(
             if right_bytes <= mem_budget:
                 dcosts["data:shard_nnz_left"] = (
                     right_bytes * frac_d
-                    + _scatter(right_bytes, coo_local[0])
+                    + _scatter(right_bytes, coo_local[0], coo_edge_cut[0])
                     + _move(cdim_l, "data", 0, left_bytes, frac_d)
                 )
         elif lo is not None and right_bytes <= mem_budget:
@@ -336,7 +415,7 @@ def plan_join(
             if left_bytes <= mem_budget:
                 dcosts["data:shard_nnz_right"] = (
                     left_bytes * frac_d
-                    + _scatter(left_bytes, coo_local[1])
+                    + _scatter(left_bytes, coo_local[1], coo_edge_cut[1])
                     + _move(cdim_r, "data", 0, right_bytes, frac_d)
                 )
         elif ro is not None and left_bytes <= mem_budget:
@@ -352,11 +431,11 @@ def plan_join(
             # ever fit a beyond-memory edge relation), else replicate
             if coo_l:
                 dcosts["data:shard_nnz_left"] = (
-                    right_bytes * frac_d + _scatter(right_bytes, coo_local[0])
+                    right_bytes * frac_d + _scatter(right_bytes, coo_local[0], coo_edge_cut[0])
                 )
             elif coo_r:
                 dcosts["data:shard_nnz_right"] = (
-                    left_bytes * frac_d + _scatter(left_bytes, coo_local[1])
+                    left_bytes * frac_d + _scatter(left_bytes, coo_local[1], coo_edge_cut[1])
                 )
             elif lo is not None:
                 dcosts["data:shard_left"] = right_bytes * frac_d
@@ -526,6 +605,7 @@ def plan_query(
     *,
     geometry: Optional[MeshGeometry] = None,
     committed: Optional[Dict[str, P]] = None,
+    stats: Optional[Dict[str, RelationStats]] = None,
 ) -> Dict[int, JoinPlan]:
     """Walk the query graph, estimate relation sizes bottom-up, and emit a
     JoinPlan per Join node (keyed by node id). ``geometry`` plans for a
@@ -541,12 +621,30 @@ def plan_query(
     arrays are already committed to (see ``engine.committed_layouts``);
     candidates that would force a device-layout rechunk then pay the
     all-to-all in the cost table instead of hiding it in
-    ``Compiled.__call__``'s device_put."""
+    ``Compiled.__call__``'s device_put.
+
+    ``stats`` maps base-relation names to tracked ``RelationStats`` (the
+    catalog snapshot — ``Database.catalog.snapshot()``). When present,
+    per-key distinct counts are propagated through the graph and replace
+    three heuristics: a Σ's output size divides the child by the dropped
+    keys' *measured* domains (not a flat 1/8 per key), the Σ-over-COO
+    scatter's edge cut is priced from the owner column's distinct count
+    (not the ``EDGE_CUT_LOCAL`` constant), and the stats-backed Σ output
+    estimate is trusted without the defensive dense-side cap. Relations
+    missing from ``stats`` fall back to the old heuristics, so a
+    stats-less call plans bit-identically to earlier releases."""
     geo = geometry or MeshGeometry.single(n_devices)
     sizes: Dict[int, float] = {}
     is_coo: Dict[int, bool] = {}
     agg_of: Dict[int, fra.Agg] = {}
     joins: List[fra.Join] = []
+    #: per-node tuple of estimated distinct values per key position
+    #: (None = no statistics reached this node); entries may be None for
+    #: individually unknown positions (e.g. literal key components).
+    dist: Dict[int, Optional[Tuple[Optional[float], ...]]] = {}
+    #: Agg nodes whose size estimate came from statistics (trustworthy
+    #: enough to skip the dense-side segment-grid cap).
+    stat_aggs: set = set()
 
     for node in query.root.topo():
         if isinstance(node, (fra.TableScan, fra.Const)):
@@ -557,15 +655,51 @@ def plan_query(
             else:  # unresolved (__seed/__fwd): assume small
                 sizes[node.id] = 0.0
                 is_coo[node.id] = False
+            st = stats.get(ref) if stats else None
+            dist[node.id] = (
+                tuple(float(d) for d in st.distinct) if st is not None else None
+            )
         elif isinstance(node, fra.Select):
             sizes[node.id] = sizes[node.child.id]
             is_coo[node.id] = is_coo[node.child.id]
+            cd = dist.get(node.child.id)
+            dist[node.id] = (
+                tuple(
+                    cd[c.idx] if isinstance(c, In) else None
+                    for c in node.proj.comps
+                )
+                if cd is not None
+                else None
+            )
         elif isinstance(node, fra.Agg):
-            # grouping reduces size by the dropped-key fraction; without
-            # key-domain statistics assume a 1/8 reduction per dropped key
             child = sizes[node.child.id]
             dropped = max(0, node.child.key_arity - node.key_arity)
-            sizes[node.id] = child / (8.0 ** dropped)
+            cd = dist.get(node.child.id)
+            kept = {c.idx for c in node.grp.comps if isinstance(c, In)}
+            dropped_pos = [
+                i for i in range(node.child.key_arity) if i not in kept
+            ]
+            if (
+                cd is not None
+                and dropped_pos
+                and all(cd[i] is not None for i in dropped_pos)
+            ):
+                # catalog statistics: a Σ dropping key position i merges
+                # its distinct[i] values into one group — the measured
+                # replacement for the flat 1/8-per-dropped-key guess
+                factor = 1.0
+                for i in dropped_pos:
+                    factor *= max(1.0, float(cd[i]))
+                sizes[node.id] = child / factor
+                stat_aggs.add(node.id)
+                dist[node.id] = tuple(
+                    cd[c.idx] if isinstance(c, In) else None
+                    for c in node.grp.comps
+                )
+            else:
+                # no statistics: assume a 1/8 reduction per dropped key
+                sizes[node.id] = child / (8.0 ** dropped)
+                dist[node.id] = None
             is_coo[node.id] = False  # Σ over COO materializes the grid
             if isinstance(node.child, fra.Join):
                 agg_of[node.child.id] = node
@@ -577,17 +711,43 @@ def plan_query(
             is_coo[node.id] = (
                 is_coo[node.left.id] or is_coo[node.right.id]
             )  # the gather join keeps the COO key set
+            ld, rd = dist.get(node.left.id), dist.get(node.right.id)
+            comps_dist: List[Optional[float]] = []
+            for c in node.proj.comps:
+                if isinstance(c, L) and ld is not None:
+                    comps_dist.append(ld[c.idx])
+                elif isinstance(c, R) and rd is not None:
+                    comps_dist.append(rd[c.idx])
+                else:
+                    comps_dist.append(None)
+            dist[node.id] = tuple(comps_dist)
         elif isinstance(node, fra.Restrict):
             sizes[node.id] = sizes[node.children[0].id]
             is_coo[node.id] = is_coo[node.ref.id]
+            # restricted to the ref's key set: its statistics apply
+            dist[node.id] = dist.get(node.ref.id) or dist.get(node.child.id)
         elif isinstance(node, fra.AddOp):
             sizes[node.id] = sizes[node.children[0].id]
             is_coo[node.id] = is_coo[node.left.id] and is_coo[node.right.id]
+            dist[node.id] = dist.get(node.left.id) or dist.get(node.right.id)
 
     def owner_dim_of(n) -> Optional[int]:
         name = _leaf_name(n)
         rel = env.get(name) if name is not None else None
         return rel.owner_dim if isinstance(rel, CooRelation) else None
+
+    def edge_cut_of(n, side: str, join: fra.Join, agg) -> Optional[float]:
+        """Catalog edge-cut fraction for a COO side's Σ-scatter, or None
+        to fall back to the EDGE_CUT_LOCAL/full-scatter heuristic."""
+        name = _leaf_name(n)
+        st = stats.get(name) if stats and name is not None else None
+        rel = env.get(name) if name is not None else None
+        if st is None or not isinstance(rel, CooRelation):
+            return None
+        od = rel.owner_dim
+        if od is None or not _coo_owner_survives(join, agg, side, od):
+            return None
+        return st.edge_cut(od, geo.data_size)
 
     def committed_of(n) -> Optional[Dict[str, Optional[int]]]:
         if not committed:
@@ -620,6 +780,11 @@ def plan_query(
                 _coo_owner_survives(node, agg, "right", owner_dim_of(node.right)),
             ),
             committed_dims=(committed_of(node.left), committed_of(node.right)),
+            coo_edge_cut=(
+                edge_cut_of(node.left, "left", node, agg),
+                edge_cut_of(node.right, "right", node, agg),
+            ),
+            sum_out_stat=agg is not None and agg.id in stat_aggs,
         )
     return plans
 

@@ -207,6 +207,49 @@ def pad_coo_nnz(rel: CooRelation, target_nnz: int) -> CooRelation:
     return CooRelation(keys, values, rel.extents, rel.owner_dim, rel.shard_offsets)
 
 
+def measure_stats(rel):
+    """Measure a relation's key-domain statistics — the
+    ``planner.RelationStats`` a ``Database`` catalog tracks per table and
+    refreshes on ``put``.
+
+    DenseRelation key sets are full grids, so every statistic is exact
+    and free (distinct = extents, density = 1). CooRelation key columns
+    are counted with ``np.unique`` over the live (non-padded) rows — a
+    host-side pass over concrete key arrays, i.e. a data-loading step
+    like ``owner_partition``, never a traced one."""
+    from .planner import RelationStats
+
+    if isinstance(rel, DenseRelation):
+        extents = rel.extents
+        size = 1
+        for e in extents:
+            size *= int(e)
+        return RelationStats(
+            distinct=tuple(int(e) for e in extents),
+            extents=tuple(int(e) for e in extents),
+            nnz=size,
+            density=1.0,
+        )
+    if isinstance(rel, CooRelation):
+        keys = np.asarray(rel.keys)
+        live = keys[keys[:, 0] != COO_PAD_KEY] if keys.size else keys
+        nnz = int(live.shape[0])
+        distinct = tuple(
+            int(np.unique(live[:, j]).size) if nnz else 0
+            for j in range(rel.key_arity)
+        )
+        size = 1
+        for e in rel.extents:
+            size *= int(e)
+        return RelationStats(
+            distinct=distinct,
+            extents=tuple(int(e) for e in rel.extents),
+            nnz=nnz,
+            density=(nnz / size) if size else 0.0,
+        )
+    raise TypeError(f"measure_stats: not a relation: {type(rel)}")
+
+
 def owner_partition(
     rel: CooRelation, num_shards: int, dim: int = -1
 ) -> CooRelation:

@@ -302,6 +302,11 @@ def _kernel_name(fn: str) -> str:
     name = _FN_ALIASES.get(fn.lower(), fn.lower())
     if name in _BIN or name in _UNARY:
         return name
+    if fn.upper() in ("AVG", "MIN", "COUNT", "STDDEV", "MEDIAN", "VAR"):
+        raise SQLError(
+            f"unsupported aggregate {fn!r} "
+            f"(supported aggregates: {sorted(_AGG_NAMES)})"
+        )
     raise SQLError(f"unknown kernel function {fn!r} "
                    f"(registered: {sorted(set(_BIN) | set(_UNARY))})")
 
@@ -397,7 +402,10 @@ def _compile_single(stmt, rels, t, vargs) -> _Rel:
                            kern, child)
     grp_cols = stmt.group_by or []
     if [c.attr for c in grp_cols] != [c.attr for c, _ in stmt.key_items]:
-        raise SQLError("GROUP BY columns must match the SELECT key columns")
+        raise SQLError(
+            f"GROUP BY columns {[c.attr for c in grp_cols]} must match the "
+            f"SELECT key columns {[c.attr for c, _ in stmt.key_items]}"
+        )
     grp = KeyFn(tuple(In(_key_pos(rel, c.attr, t)) for c in grp_cols))
     node = fra.Agg(grp, agg(val.aggfn), child)
     return _Rel(node, out_attrs)
@@ -448,7 +456,10 @@ def _compile_join(stmt, rels, order, vargs) -> _Rel:
     # projects the SELECT keys out of that composite key.
     grp_cols = stmt.group_by or []
     if [c.attr for c in grp_cols] != [c.attr for c, _ in stmt.key_items]:
-        raise SQLError("GROUP BY columns must match the SELECT key columns")
+        raise SQLError(
+            f"GROUP BY columns {[c.attr for c in grp_cols]} must match the "
+            f"SELECT key columns {[c.attr for c, _ in stmt.key_items]}"
+        )
 
     from .keys import join_equiv_classes
 

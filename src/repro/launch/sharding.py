@@ -272,3 +272,21 @@ def to_shardings(pspecs, mesh):
         pspecs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def catalog_shardings(db, mesh=None) -> Dict[str, NamedSharding]:
+    """NamedSharding per ``repro.Database`` catalog relation whose layout
+    a compiled plan committed to (``Database.layout``) — the dict to
+    ``device_put`` freshly loaded inputs against so they arrive at the
+    planned placement and the session's plan-stability record applies
+    from the first step (``Compiled.reshard_stats`` stays flat at zero).
+    ``mesh`` defaults to the session's active mesh; relations no plan has
+    placed yet are omitted."""
+    mesh = mesh if mesh is not None else db.mesh
+    if mesh is None:
+        return {}
+    out: Dict[str, NamedSharding] = {}
+    for name, entry in db.catalog.items():
+        if entry.layout is not None:
+            out[name] = NamedSharding(mesh, entry.layout)
+    return out

@@ -6,14 +6,15 @@ token-id == table-key and aggregating by position is the gather. The
 RA-generated backward is the mirrored join: scatter-add of output
 cotangents into table rows — the classic embedding gradient, derived by
 Algorithm 2 rather than written by hand. Both directions step through the
-staged engine (core/engine.py): lowered once per (batch, vocab, dim)
-signature, jit-cached across steps. Under ``core.engine.use_mesh`` the
-2-D planner places the table's block axes on the ambient (data × model)
-mesh (the vocab-parallel layout of launch/sharding.py, derived from the
-plan instead of a name rule) and may shard the token-stream CooRelation's
-nnz rows — one row per position, so nnz sharding IS batch data
-parallelism — over the data axes, with the position-keyed Σ's scatter
-costed by the planner like any other collective.
+ambient ``Database`` session (``core.session.current()``): lowered once
+per (batch, vocab, dim) signature, jit-cached across steps. Under an
+activated mesh-bearing session the 2-D planner places the table's block
+axes on the session's (data × model) mesh (the vocab-parallel layout of
+launch/sharding.py, derived from the plan instead of a name rule) and
+may shard the token-stream CooRelation's nnz rows — one row per
+position, so nnz sharding IS batch data parallelism — over the data
+axes, with the position-keyed Σ's scatter costed by the planner like any
+other collective.
 """
 
 from __future__ import annotations
@@ -24,9 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fra
+from repro.core import fra, session
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import jit_execute
 from repro.core.kernels import ADD, MUL
 from repro.core.keys import L, eq_pred, jproj, project_key
 from repro.core.relation import CooRelation, DenseRelation
@@ -58,7 +58,7 @@ def rel_embed(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
         "Ids": CooRelation(keys, jnp.ones((b,), dtype=table.dtype), (b, table.shape[0])),
         "Table": DenseRelation(table, 1),
     }
-    return jit_execute(prog.forward, env).data
+    return session.current().execute(prog.forward, env).data
 
 
 def _fwd(table, ids):
@@ -79,7 +79,7 @@ def _bwd(res, g):
         f"__fwd_{consts['Ids']}": idrel,
         "__seed": DenseRelation(g, 1),
     }
-    dtable = jit_execute(prog.grads["Table"], env)
+    dtable = session.current().execute(prog.grads["Table"], env)
     dids = np.zeros(ids.shape, dtype=jax.dtypes.float0)
     return dtable.data, dids
 

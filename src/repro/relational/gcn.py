@@ -7,16 +7,20 @@ Forward: Edge ⋈ Node (gather) + Σ-by-dst (segment sum). Backward — both
 RA-autodiff-generated query, compiled to gather + segment-sum. The Pallas
 segsum kernel is the TPU hot path for the Σ (see kernels/segsum).
 
-Forward and backward step through the staged engine (core/engine.py):
-the program is built once, lowered per (graph-size, feature-dim)
-signature, and reused as a jitted ``Compiled`` across training steps.
-Under ``core.engine.use_mesh`` the 2-D planner places the relations on
-the ambient (data × model) mesh, including the edge CooRelation's nnz
-row dimension over the data axes (``data:shard_nnz_*`` plans): the
-gather join and Σ-by-dst then run per-shard with the planned scatter
-collective, so the largest array in the program — the edge list — never
-has to fit one device. ``partitioned_edges`` pre-sorts edges by dst
-(owner partition), which the planner prices at its edge-cut estimate.
+Forward and backward step through the ambient ``Database`` session
+(``core.session.current()``): the program is built once, lowered per
+(graph-size, feature-dim) signature, and reused as a jitted ``Compiled``
+across training steps. Under an activated mesh-bearing session
+(``with repro.Database(mesh=...).activate():``) the 2-D planner places
+the relations on the session's (data × model) mesh, including the edge
+CooRelation's nnz row dimension over the data axes
+(``data:shard_nnz_*`` plans): the gather join and Σ-by-dst then run
+per-shard with the planned scatter collective, so the largest array in
+the program — the edge list — never has to fit one device.
+``partitioned_edges`` pre-sorts edges by dst (owner partition), which
+the planner prices at its edge-cut estimate — or, when the session's
+catalog tracks the edge relation's statistics, at the measured
+distinct-dst fraction.
 """
 
 from __future__ import annotations
@@ -27,9 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fra
+from repro.core import fra, session
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import jit_execute
 from repro.core.kernels import ADD, MUL
 from repro.core.keys import L, eq_pred, identity_key, jproj
 from repro.core.relation import CooRelation, DenseRelation, owner_partition
@@ -76,7 +79,7 @@ def gcn_conv(h: jnp.ndarray, edge_keys: jnp.ndarray, edge_w: jnp.ndarray) -> jnp
         "Edge": CooRelation(edge_keys, edge_w, (n, n)),
         "Node": DenseRelation(h, 1),
     }
-    return jit_execute(prog.forward, env).data
+    return session.current().execute(prog.forward, env).data
 
 
 def _fwd(h, edge_keys, edge_w):
@@ -96,8 +99,8 @@ def _bwd(res, g):
         f"__fwd_{scans['Node']}": node,
         "__seed": DenseRelation(g, 1),
     }
-    dnode = jit_execute(prog.grads["Node"], env)
-    dedge = jit_execute(prog.grads["Edge"], env)
+    dnode = session.current().execute(prog.grads["Node"], env)
+    dedge = session.current().execute(prog.grads["Edge"], env)
     dkeys = np.zeros(edge_keys.shape, dtype=jax.dtypes.float0)
     return dnode.data, dkeys, dedge.values
 

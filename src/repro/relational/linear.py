@@ -10,17 +10,18 @@ adds zero runtime cost — while the gradient really is the compiled output
 of Algorithm 2. Multi-block variants (for the paper's distributed-blocked
 benchmarks) are in ``rel_matmul`` with an explicit grid.
 
-Execution goes through the staged engine (core/engine.py): programs are
-constructed once, lowered per shape signature, and stepped through jitted
-``Compiled`` executables — repeated training steps never re-walk the FRA
-graph (the old module-local ``functools.cache`` + eager
-``compiler.execute`` pattern walked it on every call).
+Execution goes through the ambient ``Database`` session
+(``core.session.current()``): programs are constructed once, lowered per
+shape signature, and stepped through jitted ``Compiled`` executables —
+repeated training steps never re-walk the FRA graph, and the session's
+``compile_auto`` threads committed layouts so repeated steps never
+silently reshard either.
 
-Distribution: wrap calls in ``core.engine.use_mesh`` (a launch/mesh mesh
-or spec string like ``"host:2"``) and every ``jit_execute`` below
-compiles against that mesh — the 2-D planner shards the operand block
-axes over (data × model) and XLA inserts the collectives; no extra
-arguments cross the ``custom_vjp`` boundary.
+Distribution: wrap calls in an activated session —
+``with repro.Database(mesh="host:2").activate(): ...`` — and every
+execution below compiles against the session's mesh: the 2-D planner
+shards the operand block axes over (data × model) and XLA inserts the
+collectives; no extra arguments cross the ``custom_vjp`` boundary.
 """
 
 from __future__ import annotations
@@ -30,9 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import fra
+from repro.core import fra, session
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import jit_execute
 from repro.core.kernels import ADD, MATMUL
 from repro.core.keys import L, R, eq_pred, jproj, project_key
 from repro.core.relation import DenseRelation
@@ -81,7 +81,7 @@ def _run_grad(prog, scans, env_arrays, seed_rel, arity):
     )
     env["__seed"] = seed_rel
     return {
-        name: jit_execute(root, env)
+        name: session.current().execute(root, env)
         for name, root in prog.grads.items()
     }
 
@@ -91,7 +91,7 @@ def rel_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """(m, k) @ (k, n) through the relational engine (arity-0 blocking)."""
     prog, _ = _linear_prog()
     env = {"X": DenseRelation(x, 0), "W": DenseRelation(w, 0)}
-    return jit_execute(prog.forward, env).data
+    return session.current().execute(prog.forward, env).data
 
 
 def _mm_fwd(x, w):
@@ -128,7 +128,7 @@ def rel_matmul_blocked(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """
     prog, _ = _blocked_prog()
     env = {"X": DenseRelation(x, 2), "W": DenseRelation(w, 2)}
-    return jit_execute(prog.forward, env).data
+    return session.current().execute(prog.forward, env).data
 
 
 def _bmm_fwd(x, w):

@@ -1,1 +1,2 @@
 from .serve import make_prefill_step, make_decode_step, init_cache  # noqa: F401
+from .serve import BatchServer  # noqa: F401

@@ -4,11 +4,17 @@
 one new token against a seq_len-sized cache. Sliding-window layers carry
 window-sized caches; MLA carries the compressed (c_kv, k_rope) cache; SSM
 layers carry (conv window, state) — each O(1) or O(window) per step.
+
+``BatchServer`` is the session-backed front end: one compiled executable
+per (batch, seq) bucket, held in a ``repro.Database`` session's
+executable cache with LRU eviction (``max_entries``) and a
+``warmup(buckets=...)`` sweep, so traffic at mixed shapes never
+recompiles on the request path.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -99,11 +105,15 @@ def _param_shardings(model: Model, mesh):
     return to_shardings(specs, mesh)
 
 
-def make_prefill_step(model: Model, cache_len: int, *, mesh=None):
+def make_prefill_step(model: Model, cache_len: int, *, mesh=None, db=None):
     """``mesh`` (a jax Mesh or a ``launch/mesh.resolve_mesh`` spec string
     such as ``"host"`` / ``"production"``) returns the step jitted with
     the launch/sharding.py parameter layout — ``make_host_mesh`` /
-    ``make_production_mesh`` are the canonical constructors."""
+    ``make_production_mesh`` are the canonical constructors. ``db``
+    (a ``repro.Database``) supplies the mesh from the session instead;
+    ``BatchServer`` is the bucketed front end over this."""
+    if db is not None and mesh is None:
+        mesh = db.mesh
     from repro.launch.mesh import resolve_mesh
 
     mesh = resolve_mesh(mesh)
@@ -116,8 +126,10 @@ def make_prefill_step(model: Model, cache_len: int, *, mesh=None):
     return jax.jit(prefill_step, in_shardings=(_param_shardings(model, mesh), None))
 
 
-def make_decode_step(model: Model, *, mesh=None):
-    """See ``make_prefill_step`` for the ``mesh`` contract."""
+def make_decode_step(model: Model, *, mesh=None, db=None):
+    """See ``make_prefill_step`` for the ``mesh`` / ``db`` contract."""
+    if db is not None and mesh is None:
+        mesh = db.mesh
     from repro.launch.mesh import resolve_mesh
 
     cfg = model.cfg
@@ -146,3 +158,168 @@ def make_decode_step(model: Model, *, mesh=None):
         return jitted(hit[1], token, caches, length, enc_out)
 
     return sharded_decode
+
+
+# ---------------------------------------------------------------------------
+# BatchServer: the session-backed bucketed serving front end
+# ---------------------------------------------------------------------------
+
+
+class BatchServer:
+    """Bucketed serving over a ``repro.Database`` session: one compiled
+    prefill executable per **(batch, seq) bucket**, held in the session's
+    executable cache with LRU eviction and hit/evict accounting.
+
+    Requests are rounded up to the smallest configured bucket with the
+    same sequence length (zero-padded on the **batch** dim; logits and
+    caches are sliced back), so mixed-batch traffic compiles once per
+    bucket instead of once per shape. The sequence dim is never padded:
+    this repo's models emit last-position-only prefill logits and carry
+    unmasked recurrent (conv/SSM) state, so right-padding the sequence
+    would score the pad token — pad prompts to a bucketed length in the
+    tokenizer instead. ``warmup(params, ...)`` sweeps the configured
+    buckets through compilation before traffic arrives; ``cache_stats``
+    (the session's counters) reports hits / misses / evictions.
+
+    ``db`` shares an existing session (its ``max_cache_entries`` bounds
+    the cache); without one, a private session is created with
+    ``max_entries`` as the bound and ``mesh`` as its active mesh.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        cache_len: int,
+        *,
+        db=None,
+        buckets: Optional[Sequence[Tuple[int, int]]] = None,
+        max_entries: int = 8,
+        mesh=None,
+    ):
+        if db is None:
+            from repro.core.session import Database
+
+            db = Database(mesh=mesh, max_cache_entries=max_entries)
+        self.db = db
+        self.model = model
+        self.cache_len = cache_len
+        self.buckets: Optional[List[Tuple[int, int]]] = (
+            sorted({(int(b), int(s)) for b, s in buckets}) if buckets else None
+        )
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        """The session cache's hit/miss/eviction counters."""
+        return self.db.cache_stats
+
+    def bucket_for(self, batch: int, seq: int) -> Tuple[int, int]:
+        """The smallest configured (batch, seq) bucket that fits the
+        request — batch rounds up, the sequence length must match a
+        bucket exactly (see the class docstring) — or the exact shape
+        when no buckets were configured."""
+        if not self.buckets:
+            return (batch, seq)
+        fitting = [
+            (b, s) for b, s in self.buckets if b >= batch and s == seq
+        ]
+        if not fitting:
+            raise ValueError(
+                f"no bucket fits (batch={batch}, seq={seq}); configured "
+                f"buckets: {self.buckets} (batch rounds up, seq must "
+                f"match exactly — pad prompts to a bucket length "
+                f"upstream)"
+            )
+        return min(fitting, key=lambda bs: bs[0])
+
+    def _compiled(self, bucket: Tuple[int, int]):
+        key = ("prefill", id(self.model), self.cache_len, bucket)
+        mesh = self.db.mesh
+
+        def build():
+            step = make_prefill_step(self.model, self.cache_len, mesh=mesh)
+            # make_prefill_step returns a jitted step when a mesh places
+            # the params; jit the plain single-device step ourselves.
+            return step if mesh is not None else jax.jit(step)
+
+        return self.db.cached_executable(key, build)
+
+    def _pad_batch(self, batch, bsz: int, bucket: Tuple[int, int]):
+        b0 = bucket[0]
+
+        def pad(leaf):
+            if (
+                not hasattr(leaf, "ndim")
+                or leaf.ndim == 0
+                or leaf.shape[0] != bsz
+                or b0 == bsz
+            ):
+                return leaf
+            return jnp.pad(
+                leaf, [(0, b0 - bsz)] + [(0, 0)] * (leaf.ndim - 1)
+            )
+
+        return jax.tree_util.tree_map(pad, batch)
+
+    @staticmethod
+    def _slice_cache_batch(caches, bsz: int, bucket_b: int):
+        """Cut the bucket-padding rows back out of the cache pytree so
+        decode continues at the *request* batch. The batch axis follows
+        this repo's cache layout (``init_cache``): axis 1 under a
+        stacked ``scan`` subtree (axis 0 is the layer axis), axis 0
+        elsewhere; leaves without the bucket batch at that axis (e.g.
+        scalars) pass through."""
+        if bsz == bucket_b:
+            return caches
+
+        def cut(path, leaf):
+            if not hasattr(leaf, "ndim"):
+                return leaf
+            axis = 1 if any(
+                getattr(p, "key", None) == "scan" for p in path
+            ) else 0
+            if leaf.ndim > axis and leaf.shape[axis] == bucket_b:
+                return jax.lax.slice_in_dim(leaf, 0, bsz, axis=axis)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(cut, caches)
+
+    def prefill(self, params, batch: Dict[str, Any]):
+        """Bucketed prefill: pads the request's batch dim to its bucket,
+        steps the bucket's cached executable, and slices both the logits
+        and the caches' batch dim back to the request batch — decode
+        then continues seamlessly at the request batch while the
+        compiled executable stays amortized per bucket."""
+        tokens = batch["tokens"]
+        bsz, seq = int(tokens.shape[0]), int(tokens.shape[1])
+        bucket = self.bucket_for(bsz, seq)
+        step = self._compiled(bucket)
+        logits, caches = step(params, self._pad_batch(batch, bsz, bucket))
+        return (
+            logits[:bsz],
+            self._slice_cache_batch(caches, bsz, bucket[0]),
+        )
+
+    def warmup(self, params, *, buckets=None, batch_fn=None) -> None:
+        """Compile the given (default: all configured) buckets before
+        traffic arrives. ``batch_fn(batch, seq)`` builds the exemplar
+        batch; the default is a zero token batch, which only suits
+        token-only models — encoder-decoder / vision configs (reading
+        ``frames`` / ``patches``) must pass ``batch_fn`` so the warmed
+        trace matches real traffic's input structure."""
+        todo = buckets if buckets is not None else (self.buckets or ())
+        for b, s in todo:
+            step = self._compiled((int(b), int(s)))
+            ex = (
+                batch_fn(int(b), int(s))
+                if batch_fn is not None
+                else {"tokens": jnp.zeros((int(b), int(s)), jnp.int32)}
+            )
+            try:
+                jax.block_until_ready(step(params, ex))
+            except KeyError as e:
+                raise ValueError(
+                    f"warmup's default exemplar batch carries only "
+                    f"'tokens' but the model also reads {e}; pass "
+                    f"batch_fn=lambda b, s: {{...}} building the full "
+                    f"input batch (e.g. repro.data.batch_for)"
+                ) from e

@@ -43,6 +43,7 @@ def make_train_step(
     jit: bool = True,
     donate: bool = False,
     mesh=None,
+    database=None,
 ) -> Callable:
     """Build the train step once; the returned callable is the compiled
     executable reused every iteration.
@@ -52,15 +53,23 @@ def make_train_step(
     when the caller rebinds both from the step's outputs (donation under
     an *outer* jit wrapper is ignored by JAX, so legacy callers that
     re-wrap the step in jax.jit are unaffected).
-    ``mesh`` applies the distribution planner's parameter layout
-    (launch/sharding.py) inside the compiled step via sharding
-    constraints, so XLA SPMD places each matmul's collective. It takes a
-    jax Mesh or a ``launch/mesh.resolve_mesh`` spec string (``"host"``,
+    ``database`` threads a ``repro.Database`` session through the step:
+    the mesh defaults to the session's active mesh and every returned
+    step runs inside ``database.activate()``, so the relational ops in
+    the model plan/dispatch through that session — the one front door.
+    ``mesh`` (when given, or inherited from the session) applies the
+    distribution planner's parameter layout (launch/sharding.py) inside
+    the compiled step via sharding constraints, so XLA SPMD places each
+    matmul's collective. It takes a jax Mesh or a
+    ``launch/mesh.resolve_mesh`` spec string (``"host"``,
     ``"host:<model>"``, ``"production"``, ``"production:multipod"``) —
     ``launch.mesh.make_host_mesh`` / ``make_production_mesh`` are the
     canonical constructors either way.
     """
     cfg = model.cfg
+
+    if database is not None and mesh is None:
+        mesh = database.mesh
 
     if isinstance(mesh, str):
         from repro.launch.mesh import resolve_mesh
@@ -106,10 +115,19 @@ def make_train_step(
         metrics = dict(metrics, total=total)
         return params, opt_state, metrics
 
-    if not jit:
-        return train_step
-    donate_argnums = (0, 1) if donate else ()
-    return jax.jit(train_step, donate_argnums=donate_argnums)
+    if jit:
+        donate_argnums = (0, 1) if donate else ()
+        stepped = jax.jit(train_step, donate_argnums=donate_argnums)
+    else:
+        stepped = train_step
+    if database is None:
+        return stepped
+
+    def sessioned_step(params, opt_state, batch):
+        with database.activate():
+            return stepped(params, opt_state, batch)
+
+    return sessioned_step
 
 
 def init_train_state(model, key, dtype=None) -> TrainState:

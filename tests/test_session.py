@@ -1,0 +1,567 @@
+"""Database session API: catalog + tracked statistics + QueryHandle as
+the one front door. Covers the catalog (schemas, statistics refreshed on
+put, donated-buffer guard), SQL/FRA round trips, statistics-driven plan
+changes vs the heuristic fallback (the acceptance "skewed key domain
+flips the join plan"), the committed-layout plan-stability guarantee
+(bit-identical plans, reshard_stats flat at zero), the per-(cache entry,
+relation) ReshardWarning regression, the serving batch cache, and the
+deprecation shims."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro
+from repro.core import compiler, fra, session
+from repro.core.autodiff import ra_autodiff
+from repro.core.engine import ReshardWarning, engine_for
+from repro.core.kernels import ADD, MATMUL, MUL
+from repro.core.keys import L, R, eq_pred, identity_key, jproj, project_key
+from repro.core.planner import MeshGeometry, RelationStats, plan_query
+from repro.core.relation import (
+    CooRelation,
+    DenseRelation,
+    measure_stats,
+    owner_partition,
+)
+from repro.core.sql import compile_sql
+from repro.launch.mesh import make_host_mesh
+
+requires8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (tier1-spmd lane: "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+LOGREG_SQL = """
+mm   := SELECT Rx.row, SUM(multiply(Rx.val, theta.val))
+        FROM Rx, theta WHERE Rx.col = theta.col GROUP BY Rx.row;
+pred := SELECT mm.row, logistic(mm.val) FROM mm;
+SELECT SUM(xent(pred.val, Ry.val)) FROM pred, Ry WHERE pred.row = Ry.row
+"""
+
+
+def _logreg_db(n=64, m=8, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    y = jnp.asarray((rng.uniform(size=n) > 0.5), jnp.float32)
+    theta = jnp.asarray(rng.normal(size=m) * 0.1, jnp.float32)
+    db = repro.Database()
+    db.put("Rx", X, keys=("row", "col"))
+    db.put("Ry", y, keys=("row",))
+    db.put("theta", theta, keys=("col",))
+    return db
+
+
+# ---------------------------------------------------------------------------
+# Catalog: schemas, statistics, guards
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_put_wraps_arrays_and_tracks_schema():
+    db = repro.Database()
+    db.put("A", jnp.zeros((4, 3)), keys=("i", "j"))
+    rel = db.get("A")
+    assert isinstance(rel, DenseRelation) and rel.key_arity == 2
+    assert db.schema("A") == ("i", "j")
+    # chunked: two key dims, the rest chunk
+    db.put("B", jnp.zeros((4, 3, 8, 8)), keys=("bi", "bj"))
+    assert db.get("B").chunk_shape == (8, 8)
+    # update without keys keeps the declared schema
+    db.put("A", jnp.ones((4, 3)), key_arity=2)
+    assert db.schema("A") == ("i", "j")
+
+
+def test_catalog_stats_dense_and_coo():
+    db = repro.Database()
+    db.put("A", jnp.zeros((4, 6)), keys=("i", "j"))
+    st = db.stats("A")
+    assert st == RelationStats(distinct=(4, 6), extents=(4, 6), nnz=24, density=1.0)
+    # COO: distinct counted over live rows, padding excluded
+    keys = jnp.asarray([[0, 1], [0, 1], [1, 1], [2, 1]], jnp.int32)
+    coo = CooRelation(keys, jnp.ones((4,), jnp.float32), (8, 8))
+    db.put("E", coo, keys=("src", "dst"))
+    st = db.stats("E")
+    assert st.distinct == (3, 1) and st.nnz == 4
+    assert st.density == pytest.approx(4 / 64)
+    part = owner_partition(coo, num_shards=3, dim=1)  # pads to 6 rows
+    assert measure_stats(part).nnz == 4  # pad rows are not live tuples
+
+
+def test_catalog_missing_and_donated_guards():
+    db = _logreg_db()
+    with pytest.raises(repro.CatalogError, match="Zz"):
+        db.get("Zz")
+    handle = db.query(compile_sql(
+        LOGREG_SQL,
+        schema={"Rx": ("row", "col"), "theta": ("col",), "Ry": ("row",)},
+        inputs=("theta",),
+    ))
+    loss, grads = handle.step(donate=("theta",))
+    with pytest.raises(repro.CatalogError, match="donated"):
+        db.get("theta")
+    db.put("theta", jnp.zeros((8,)), keys=("col",))  # re-put clears it
+    assert db.get("theta").key_arity == 1
+
+
+# ---------------------------------------------------------------------------
+# SQL / FRA round trips through the handle
+# ---------------------------------------------------------------------------
+
+
+def test_db_sql_matches_fra_built_program():
+    db = _logreg_db()
+    handle = db.sql(LOGREG_SQL, wrt=("theta",))
+    loss, grads = handle.step()
+
+    # oracle: the same SQL compiled standalone, run through the eager path
+    q = compile_sql(
+        LOGREG_SQL,
+        schema={"Rx": ("row", "col"), "theta": ("col",), "Ry": ("row",)},
+        inputs=("theta",),
+    )
+    prog = ra_autodiff(q)
+    env = {n: db.get(n) for n in ("Rx", "Ry", "theta")}
+    out_ref, grads_ref = compiler.grad_eval(prog, env)
+    np.testing.assert_allclose(
+        np.asarray(loss.data), np.asarray(out_ref.data), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(grads["theta"].data),
+        np.asarray(grads_ref["theta"].data),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+    # forward() alone agrees too
+    fwd = handle.forward()
+    np.testing.assert_allclose(
+        np.asarray(fwd.data), np.asarray(out_ref.data), rtol=1e-5
+    )
+
+
+def test_db_query_fra_handle_grad_and_wrt():
+    db = repro.Database()
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(2, 2, 4, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 2, 4, 4)), jnp.float32)
+    db.put("A", a, keys=("row", "col"))
+    db.put("B", b, keys=("row", "col"))
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+    handle = db.query(q)
+    out = handle.forward()
+    assert out.key_arity == 2
+    seed = DenseRelation(jnp.ones_like(out.data), 2)
+    grads = handle.grad(wrt=("A",), seed=seed)
+    assert set(grads) == {"A"}
+    with pytest.raises(ValueError, match="no gradient for"):
+        handle.grad(wrt=("C",), seed=seed)
+    with pytest.raises(ValueError, match="cannot donate"):
+        handle.step(donate=("C",), seed=seed)
+
+
+def test_query_handle_lowered_once_across_steps():
+    db = _logreg_db()
+    handle = db.sql(LOGREG_SQL, wrt=("theta",))
+    handle.step()
+    eng = engine_for(handle._program(None))
+    walks = eng.trace_count
+    for _ in range(3):
+        loss, grads = handle.step()
+        db.put(
+            "theta",
+            db.get("theta").data - 0.01 * grads["theta"].data,
+        )
+    assert eng.trace_count == walks  # catalog puts did not re-lower
+
+
+# ---------------------------------------------------------------------------
+# Statistics-driven planning (the acceptance plan flips)
+# ---------------------------------------------------------------------------
+
+GEO = MeshGeometry("model", 2, ("data",), 4)
+
+
+def _skew_query_env():
+    """A(i,j) ⋈ B(j) with Σ dropping the batch key i — the heuristic
+    assumes the Σ shrinks the output 8×; a skewed (2-wide) i domain
+    makes it only 2×, which reprices every psum."""
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0)), MUL,
+        fra.scan("A", 2), fra.scan("B", 1),
+    )
+    q = fra.Query(fra.Agg(project_key(), ADD, join), inputs=("A", "B"))
+    env = {
+        "A": DenseRelation(jnp.zeros((2, 64, 512), jnp.float32), 2),
+        "B": DenseRelation(jnp.zeros((64, 512), jnp.float32), 1),
+    }
+    return q, env
+
+
+def test_skewed_key_domain_flips_the_plan_vs_heuristic():
+    """Acceptance: tracked key-domain statistics change the chosen join
+    plan relative to the 1/8-per-dropped-key fallback."""
+    q, env = _skew_query_env()
+    (p_heur,) = plan_query(q, env, 2, geometry=GEO).values()
+    stats = {n: measure_stats(r) for n, r in env.items()}
+    (p_stat,) = plan_query(q, env, 2, geometry=GEO, stats=stats).values()
+    # the measured Σ output (child/2, not child/8) makes the co-partition
+    # psum 4× dearer: the model-axis plan flips to broadcasting B
+    assert p_heur.kind == "copartition"
+    assert p_stat.kind == "broadcast_right"
+    assert p_stat.costs["copartition"] > p_heur.costs["copartition"]
+    # absent stats entries keep the old plans bit-for-bit
+    (p_none,) = plan_query(q, env, 2, geometry=GEO, stats={}).values()
+    assert p_none == p_heur
+
+
+def test_skewed_catalog_flips_plan_through_the_database():
+    """The same flip through the front door: two sessions differing only
+    in catalog statistics choose different plans."""
+    q, env = _skew_query_env()
+    db = repro.Database()
+    db.put("A", env["A"].data, keys=("i", "j"))
+    db.put("B", env["B"].data, keys=("j",))
+    handle = db.query(q)
+    plans_stat = handle.plan(geometry=GEO)
+    plans_heur = handle.plan(geometry=GEO, use_stats=False)
+    (p_stat,), (p_heur,) = plans_stat.values(), plans_heur.values()
+    assert p_heur.kind == "copartition"
+    assert p_stat.kind == "broadcast_right"
+
+
+def test_skewed_coo_owner_domain_flips_nnz_sharding():
+    """A skewed (tiny) dst domain prices the Σ-over-edges scatter near
+    the full all-reduce instead of EDGE_CUT_LOCAL, flipping the data-axis
+    placement from nnz sharding to replication."""
+    nnz = 20_000
+    edges = owner_partition(
+        CooRelation(
+            jnp.zeros((nnz, 2), jnp.int32),
+            jnp.zeros((nnz,), jnp.float32),
+            (64, 64),
+        ),
+        num_shards=4,
+        dim=1,
+    )
+    gq = fra.Query(
+        fra.Agg(identity_key(1), ADD, fra.Join(
+            eq_pred((0, 0)), jproj(L(1)), MUL,
+            fra.scan("Edge", 2), fra.scan("Node", 1),
+        )),
+        inputs=("Edge", "Node"),
+    )
+    # a wide feature grid: the Σ's segment output is what the scatter
+    # moves, so the edge-cut fraction decides the placement
+    genv = {"Edge": edges, "Node": DenseRelation(jnp.zeros((64, 4096), jnp.float32), 1)}
+    (p_heur,) = plan_query(gq, genv, 2, geometry=GEO).values()
+    assert p_heur.data_kind == "data:shard_nnz_left"
+    skew = RelationStats(
+        distinct=(64, 2), extents=(64, 64), nnz=nnz, density=nnz / 4096
+    )
+    (p_stat,) = plan_query(
+        gq, genv, 2, geometry=GEO, stats={"Edge": skew}
+    ).values()
+    assert p_stat.data_kind == "data:replicate"
+    # a wide owner domain keeps (and re-prices) the nnz sharding
+    wide = RelationStats(
+        distinct=(64, 64), extents=(64, 64), nnz=nnz, density=nnz / 4096
+    )
+    (p_wide,) = plan_query(
+        gq, genv, 2, geometry=GEO, stats={"Edge": wide}
+    ).values()
+    assert p_wide.data_kind == "data:shard_nnz_left"
+    assert (
+        p_wide.costs["data:shard_nnz_left"]
+        < p_heur.costs["data:shard_nnz_left"]
+    )  # measured cut 3/64 < the 1/8 constant
+
+
+def test_edge_cut_statistic():
+    st = RelationStats(distinct=(64, 16), extents=(64, 64), nnz=1000)
+    assert st.edge_cut(1, 1) == 0.0
+    assert st.edge_cut(1, 4) == pytest.approx(3 / 16)
+    skew = RelationStats(distinct=(64, 2), extents=(64, 64), nnz=1000)
+    assert skew.edge_cut(1, 4) == 1.0  # clamped at the full scatter
+
+
+# ---------------------------------------------------------------------------
+# Committed layouts: plan stability (acceptance) + per-relation warnings
+# ---------------------------------------------------------------------------
+
+
+def test_plan_stability_two_calls_bit_identical_no_reshard():
+    """Acceptance: two consecutive calls on a committed-layout env
+    produce bit-identical plans (the same Compiled, equal JoinPlans) with
+    zero resharded bytes on the second call."""
+    db = _logreg_db()
+    db.use_mesh(make_host_mesh())
+    handle = db.sql(LOGREG_SQL, wrt=("theta",))
+    loss1, grads1 = handle.step()
+    first = handle.last
+    plans1 = dict(first.plans)
+    # commit the parameter to the layout the plan itself chose — the
+    # steady state once step outputs feed the next call
+    spec = first.planned_spec("theta")
+    theta = jax.device_put(
+        db.get("theta").data, NamedSharding(db.mesh, spec)
+    )
+    db.put("theta", theta)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReshardWarning)  # no silent reshard
+        loss2, grads2 = handle.step()
+    second = handle.last
+    assert second is first                       # the recorded plan is reused
+    assert dict(second.plans) == plans1          # bit-identical plans
+    assert second.reshard_stats["last_call_bytes"] == 0
+    np.testing.assert_allclose(
+        np.asarray(loss2.data), np.asarray(loss1.data), rtol=1e-6
+    )
+    # the catalog records the committed layout
+    assert db.layout("theta") == spec
+
+
+def test_compile_auto_replans_on_foreign_layout():
+    """An input committed to a *different* layout than the recorded plan
+    triggers exactly one re-plan (the rechunk is charged), after which
+    the new record is stable."""
+    rng = np.random.default_rng(3)
+    env = {
+        "A": DenseRelation(jnp.asarray(rng.normal(size=(4, 4, 8, 8)), jnp.float32), 2),
+        "B": DenseRelation(jnp.asarray(rng.normal(size=(4, 4, 8, 8)), jnp.float32), 2),
+    }
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+    mesh = make_host_mesh()
+    low = engine_for(q).lower(env)
+    c1 = low.compile_auto(env, mesh=mesh)
+    assert low.compile_auto(env, mesh=mesh) is c1  # uncommitted: stable
+    env2 = dict(env)
+    foreign = NamedSharding(mesh, P(None, "model"))
+    env2["A"] = DenseRelation(jax.device_put(env["A"].data, foreign), 2)
+    c2 = low.compile_auto(env2, mesh=mesh)
+    if c2 is not c1:  # a 1-device mesh has only one (replicated) layout
+        assert low.compile_auto(env2, mesh=mesh) is c2
+
+
+@pytest.mark.spmd
+@requires8
+def test_reshard_warning_once_per_cache_entry_and_relation():
+    """Regression: a second offending relation warns too — ReshardWarning
+    fires once per (cache entry, relation), not once per cache entry."""
+    mesh = make_host_mesh(model=2)
+    rng = np.random.default_rng(6)
+    n, m = 64, 8
+    env = {
+        "A": DenseRelation(jnp.asarray(rng.normal(size=(n, n, m, m)), jnp.float32), 2),
+        "B": DenseRelation(jnp.asarray(rng.normal(size=(n, n, m, m)), jnp.float32), 2),
+    }
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+    comp = engine_for(q).lower(env).compile(mesh=mesh)
+    wrong = NamedSharding(mesh, P(None, None, "model", None))
+    env_wrong = dict(env)
+    env_wrong["A"] = DenseRelation(jax.device_put(env["A"].data, wrong), 2)
+    env_wrong["B"] = DenseRelation(jax.device_put(env["B"].data, wrong), 2)
+    with pytest.warns(ReshardWarning) as rec:
+        comp(env_wrong)
+    hits = {w.message.relation for w in rec if isinstance(w.message, ReshardWarning)}
+    assert hits == {"A", "B"}          # both offenders named, same entry
+    for w in rec:
+        if isinstance(w.message, ReshardWarning):
+            assert w.message.bytes_moved == int(env["A"].data.nbytes)
+    # second call with the same relations: already reported, stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReshardWarning)
+        comp(env_wrong)
+    assert comp.reshard_stats["resharded_calls"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Ambient session + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_ambient_session_stack():
+    base = session.current()
+    db = repro.Database()
+    with db.activate():
+        assert session.current() is db
+        inner = repro.Database()
+        with inner.activate():
+            assert session.current() is inner
+        assert session.current() is db
+    assert session.current() is base
+
+
+def test_relational_ops_run_through_ambient_session():
+    from repro.relational import rel_matmul
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 3)), jnp.float32)
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(3, 2)), jnp.float32)
+    ref = np.asarray(x) @ np.asarray(w)
+    with repro.Database().activate():
+        out = rel_matmul(x, w)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5)
+
+
+def test_front_door_shims_emit_deprecation_warnings():
+    """RAEngine / jit_execute / use_mesh / committed_layouts survive as
+    shims but warn; the internal session path stays silent."""
+    from repro.core import engine
+
+    q = fra.Query(
+        fra.Join(eq_pred(), jproj(), MATMUL, fra.scan("X", 0), fra.scan("W", 0)),
+        inputs=("X", "W"),
+    )
+    env = {
+        "X": DenseRelation(jnp.ones((2, 3)), 0),
+        "W": DenseRelation(jnp.ones((3, 2)), 0),
+    }
+    with pytest.warns(DeprecationWarning, match="repro.Database"):
+        eng = engine.RAEngine(q)
+    with pytest.warns(DeprecationWarning, match="repro.Database"):
+        out = engine.jit_execute(q, env)
+    assert out.data.shape == (2, 2)
+    with pytest.warns(DeprecationWarning, match="repro.Database"):
+        with engine.use_mesh(make_host_mesh()):
+            pass
+    with pytest.warns(DeprecationWarning, match="repro.Database"):
+        assert engine.committed_layouts(env) == {}
+    # the session-internal constructors/paths never warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng2 = engine.engine_for(q)
+        repro.Database().execute(q, env)
+    assert eng2.source is q
+
+
+# ---------------------------------------------------------------------------
+# Serving batch cache (satellite)
+# ---------------------------------------------------------------------------
+
+
+class _StubModel:
+    """Minimal Model stand-in: prefill returns per-token logits."""
+
+    cfg = None
+
+    def prefill(self, params, batch, cache_len):
+        t = batch["tokens"]
+        return t[..., None].astype(jnp.float32) * params, {"len": cache_len}
+
+
+def test_batch_server_buckets_hits_and_evictions():
+    from repro.serving import BatchServer
+
+    srv = BatchServer(
+        _StubModel(), cache_len=64,
+        buckets=[(2, 16), (4, 32), (8, 64)], max_entries=2,
+    )
+    p = jnp.asarray(2.0)
+    srv.warmup(p, buckets=[(2, 16), (4, 32)])
+    assert srv.cache_stats == {"hits": 0, "misses": 2, "evictions": 0}
+
+    # smaller batch at a bucketed seq: a cache hit, batch-padded + sliced
+    logits, _ = srv.prefill(p, {"tokens": jnp.ones((1, 16), jnp.int32)})
+    assert logits.shape == (1, 16, 1)
+    assert srv.cache_stats["hits"] == 1
+    np.testing.assert_allclose(np.asarray(logits), 2.0)
+
+    # request needing the third bucket: a miss that evicts the LRU entry
+    logits, _ = srv.prefill(p, {"tokens": jnp.ones((5, 64), jnp.int32)})
+    assert logits.shape == (5, 64, 1)
+    assert srv.cache_stats == {"hits": 1, "misses": 3, "evictions": 1}
+
+    # the evicted (4, 32) bucket misses again and evicts the next LRU
+    srv.prefill(p, {"tokens": jnp.ones((4, 32), jnp.int32)})
+    assert srv.cache_stats["misses"] == 4
+    assert srv.cache_stats["evictions"] == 2
+
+    with pytest.raises(ValueError, match="no bucket fits"):
+        srv.prefill(p, {"tokens": jnp.ones((16, 64), jnp.int32)})
+    # the sequence dim is never padded (last-position logits would score
+    # the pad token): an unbucketed seq is refused, not rounded up
+    with pytest.raises(ValueError, match="seq must match exactly"):
+        srv.prefill(p, {"tokens": jnp.ones((2, 10), jnp.int32)})
+
+
+def test_batch_server_shares_session_cache():
+    from repro.serving import BatchServer
+
+    db = repro.Database(max_cache_entries=8)
+    srv = BatchServer(_StubModel(), cache_len=8, db=db)
+    srv.prefill(jnp.asarray(1.0), {"tokens": jnp.zeros((1, 4), jnp.int32)})
+    assert db.cache_stats["misses"] == 1  # lives in the session's cache
+
+
+@pytest.mark.spmd
+@requires8
+def test_plan_stability_on_2d_mesh():
+    """Acceptance on the real 4×2 (data × model) host mesh: consecutive
+    committed-layout steps reuse the recorded plan — bit-identical plans,
+    zero resharded bytes, matching results."""
+    db = _logreg_db(n=64, m=8, seed=9)
+    db.use_mesh(make_host_mesh(model=2))
+    handle = db.sql(LOGREG_SQL, wrt=("theta",))
+    loss1, grads1 = handle.step()
+    first = handle.last
+    assert first.placements["Rx"] == {"data": 0, "model": 1}
+    # commit every relation to the plan's own placement (steady state):
+    # the catalog recorded each plan-committed layout
+    from repro.launch.sharding import catalog_shardings
+
+    placed = catalog_shardings(db)
+    assert set(placed) == {"Rx", "Ry", "theta"}
+    for name, sh in placed.items():
+        db.put(name, jax.device_put(db.get(name).data, sh))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReshardWarning)
+        loss2, grads2 = handle.step()
+    assert handle.last is first
+    assert dict(handle.last.plans) == dict(first.plans)
+    assert handle.last.reshard_stats["last_call_bytes"] == 0
+    np.testing.assert_allclose(
+        np.asarray(loss2.data), np.asarray(loss1.data), atol=1e-5
+    )
+
+
+def test_batch_server_slices_cache_batch_for_sub_bucket_requests():
+    """Regression: a request smaller than its bucket gets caches sliced
+    back to the request batch (scan subtrees slice axis 1 — axis 0 is
+    the stacked layer axis — everything else axis 0), so decode
+    continues at the request batch instead of crashing on bucket-sized
+    caches."""
+    from repro.serving import BatchServer
+
+    class CacheStub:
+        cfg = None
+
+        def prefill(self, params, batch, cache_len):
+            b = batch["tokens"].shape[0]
+            caches = [{
+                "scan": {"kv": {"k": jnp.zeros((3, b, cache_len, 2))}},
+                "tail": [{"kv": {"v": jnp.zeros((b, cache_len, 2))}}],
+            }]
+            return batch["tokens"][..., None].astype(jnp.float32), caches
+
+    srv = BatchServer(CacheStub(), cache_len=8, buckets=[(4, 16)])
+    logits, caches = srv.prefill(
+        jnp.asarray(1.0), {"tokens": jnp.ones((2, 16), jnp.int32)}
+    )
+    assert logits.shape == (2, 16, 1)
+    assert caches[0]["scan"]["kv"]["k"].shape == (3, 2, 8, 2)   # axis 1 cut
+    assert caches[0]["tail"][0]["kv"]["v"].shape == (2, 8, 2)   # axis 0 cut

@@ -181,3 +181,103 @@ def test_group_by_mismatch_rejected():
             {"A": ("row", "col"), "B": ("col",)},
             ("A",),
         )
+
+
+# ---------------------------------------------------------------------------
+# Error paths: SQLError messages must name the offending token
+# ---------------------------------------------------------------------------
+
+_SCHEMA = {"A": ("row", "col"), "B": ("row", "col")}
+
+
+def _compile(script, schema=_SCHEMA, inputs=("A",)):
+    return compile_sql(script, schema=schema, inputs=inputs)
+
+
+def test_sql_error_unknown_table_names_token():
+    with pytest.raises(SQLError, match=r"unknown relation 'Foo'"):
+        _compile("SELECT Foo.row, SUM(Foo.val) FROM Foo GROUP BY Foo.row",
+                 inputs=())
+
+
+def test_sql_error_unknown_key_column_names_token():
+    with pytest.raises(SQLError, match=r"A\.bogus is not a key attribute"):
+        _compile("SELECT A.bogus, SUM(A.val) FROM A GROUP BY A.bogus")
+
+
+def test_sql_error_unknown_table_in_value_expr_names_token():
+    with pytest.raises(SQLError, match=r"unknown table 'C'"):
+        _compile("SELECT A.row, SUM(multiply(A.val, C.val)) FROM A, B "
+                 "WHERE A.col = B.row GROUP BY A.row")
+
+
+def test_sql_error_bad_aggregate_names_token():
+    with pytest.raises(SQLError, match=r"unsupported aggregate 'AVG'"):
+        _compile("SELECT A.row, AVG(A.val) FROM A GROUP BY A.row")
+    with pytest.raises(SQLError, match=r"unknown kernel function 'frobnicate'"):
+        _compile("SELECT A.row, frobnicate(A.val) FROM A")
+
+
+def test_sql_error_join_on_value_attr_names_token():
+    with pytest.raises(SQLError, match=r"A\.val is not a key attribute"):
+        _compile("SELECT A.row, B.col, SUM(multiply(A.val, B.val)) "
+                 "FROM A, B WHERE A.val = B.row GROUP BY A.row, B.col")
+
+
+def test_sql_error_key_used_as_value_names_token():
+    with pytest.raises(SQLError, match=r"A\.row is a key, not a value"):
+        _compile("SELECT A.col, SUM(multiply(A.row, B.val)) FROM A, B "
+                 "WHERE A.col = B.row GROUP BY A.col")
+
+
+def test_sql_error_group_by_mismatch_names_columns():
+    with pytest.raises(SQLError, match=r"\['col'\].*\['row'\]"):
+        _compile("SELECT A.row, SUM(A.val) FROM A GROUP BY A.col")
+
+
+def test_sql_error_duplicate_alias_names_token():
+    with pytest.raises(SQLError, match=r"duplicate table alias 'x'"):
+        _compile("SELECT x.row, SUM(multiply(x.val, x.val)) FROM A x, B x "
+                 "WHERE x.col = x.row GROUP BY x.row")
+
+
+# ---------------------------------------------------------------------------
+# db.sql round trip against the FRA-built equivalent
+# ---------------------------------------------------------------------------
+
+
+def test_db_sql_matmul_matches_fra_equivalent():
+    import repro
+    from repro.core.kernels import ADD, MATMUL
+    from repro.core.keys import L, R, eq_pred, jproj, project_key
+
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.normal(size=(2, 2, 4, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2, 2, 4, 4)).astype(np.float32))
+
+    db = repro.Database()
+    db.put("A", a, keys=("row", "col"))
+    db.put("B", b, keys=("row", "col"))
+    handle = db.sql(MATMUL_SQL, wrt=("A", "B"))
+    out_sql = handle.forward()
+
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+    out_fra = db.query(q).forward()
+    np.testing.assert_allclose(
+        np.asarray(out_sql.data), np.asarray(out_fra.data), rtol=1e-5
+    )
+
+    # and the gradient round trip
+    seed = jnp.ones_like(out_fra.data)
+    g_sql = handle.grad(seed=seed)
+    g_fra = db.query(q).grad(seed=seed)
+    for name in ("A", "B"):
+        np.testing.assert_allclose(
+            np.asarray(g_sql[name].data),
+            np.asarray(g_fra[name].data),
+            rtol=1e-5,
+        )

@@ -33,9 +33,12 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 #: gated suites: fresh emission BENCH_<name>.json vs baselines/<name>.json
 SUITES = ("engine_overhead", "kernel_dispatch")
 
-#: names considered CPU-stable: compiled/jitted steps only.
+#: names considered CPU-stable: compiled/jitted steps only (the session
+#: variant is the same jitted step behind the Database front door, so
+#: gating it bounds the session's per-call overhead too).
 STABLE = (
     re.compile(r"^engine_overhead/.*/compiled$"),
+    re.compile(r"^engine_overhead/.*/session$"),
     re.compile(r"^kernel_dispatch/engine-"),
 )
 
