@@ -12,6 +12,11 @@ auto-diff with each optimization toggled off, and measures (a) gradient
 query *size* (operator count — plan complexity) and (b) compiled
 execution time of one gradient evaluation. Correctness is asserted
 against the fully-optimized plan.
+
+The ``rjp/pushdown-*`` lanes measure the cost-gated Σ-through-⋈ rewrite
+(core/rewrite.py) on a 3-relation multi-join Σ∘⋈ chain whose top Σ
+drops the middle join key: rewrite-enabled vs rewrite-disabled compiled
+gradient steps, both asserted against the jnp-tier unrewritten oracle.
 """
 
 from __future__ import annotations
@@ -79,6 +84,88 @@ def _interpreter_time(opts: RJPOptions) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def _chain_query() -> fra.Query:
+    """3-relation Σ∘⋈∘⋈ chain: loss = Σ_{()} Σ_{(a,d)} (A ⋈ B ⋈ C).
+
+    The inner Σ keeps only the chain's endpoint keys, so the unrewritten
+    plan materializes the full 3-key join output before aggregating —
+    the shape the Σ-pushdown rewrite factorizes into per-join partial
+    aggregates."""
+    from repro.core.kernels import MUL
+
+    j1 = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    j2 = fra.Join(
+        eq_pred((2, 0)), jproj(L(0), L(1), L(2), R(1)), MUL,
+        j1, fra.scan("C", 2),
+    )
+    loss = fra.Agg(EMPTY_KEY, ADD, fra.Agg(project_key(0, 3), ADD, j2))
+    return fra.Query(loss, inputs=("A", "B", "C"))
+
+
+def _pushdown_lane() -> None:
+    """rjp/pushdown-on vs rjp/pushdown-off: compiled grad step of the
+    3-relation chain with the rewrite stage enabled vs disabled."""
+    from repro.core import rewrite
+    from repro.core.relation import measure_stats
+
+    q = _chain_query()
+    n = 96
+    rng = np.random.default_rng(1)
+    scale = 1.0 / np.sqrt(n)
+    arrs = {
+        k: jnp.asarray(rng.normal(size=(n, n)).astype(np.float32) * scale)
+        for k in ("A", "B", "C")
+    }
+    env = {k: DenseRelation(a, 2) for k, a in arrs.items()}
+    stats = {k: measure_stats(v) for k, v in env.items()}
+
+    # rewrite ON: the cost-gated stage factorizes the chain, and the
+    # factorized program differentiates under the default RJP options.
+    prog_on, report = rewrite.rewrite_program(
+        ra_autodiff(q), env, stats=stats
+    )
+    assert report.changed, "pushdown gate unexpectedly declined"
+    # rewrite OFF: the unrewritten chain's *fused* gradient has no
+    # multiplicative RJP solution (the Σ drops the middle join key, so
+    # the VJP w.r.t. the nested join cannot reconstruct it) — its best
+    # lowerable derivation disables join-agg fusion.
+    prog_off = ra_autodiff(q, opts=RJPOptions(False, True, True))
+
+    # jnp-tier unrewritten oracle: eager jnp-table lowering of prog_off
+    _, oracle = compiler.grad_eval(
+        prog_off, env, fuse_join_agg=False, dispatch="jnp"
+    )
+
+    lanes = (
+        ("pushdown-on", prog_on, True),
+        ("pushdown-off", prog_off, False),
+    )
+    for name, prog, fuse in lanes:
+        size = sum(_plan_size(g) for g in prog.grads.values())
+
+        def step(A, B, C, _prog=prog, _fuse=fuse):
+            e = {
+                "A": DenseRelation(A, 2),
+                "B": DenseRelation(B, 2),
+                "C": DenseRelation(C, 2),
+            }
+            loss, grads = compiler.grad_eval(_prog, e, fuse_join_agg=_fuse)
+            return grads["A"].data, grads["B"].data, grads["C"].data
+
+        jstep = jax.jit(step)
+        outs = jstep(arrs["A"], arrs["B"], arrs["C"])
+        for g, k in zip(outs, ("A", "B", "C")):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(oracle[k].data),
+                rtol=2e-4, atol=1e-5,
+            )
+        us = timeit(jstep, arrs["A"], arrs["B"], arrs["C"], iters=10, warmup=2)
+        record(f"rjp/{name}", us, f"plan_ops={size};n={n}")
+
+
 def run() -> None:
     q = _matmul_loss_query()
     gb, gk, gn = 8, 8, 8     # block grid
@@ -125,6 +212,8 @@ def run() -> None:
             np.testing.assert_allclose(np.asarray(gw), ref_grads[1], rtol=2e-4, atol=1e-5)
         us = timeit(jstep, X, W, iters=10, warmup=2)
         record(f"rjp/{name}", us, f"plan_ops={size}")
+
+    _pushdown_lane()
 
 
 if __name__ == "__main__":

@@ -11,9 +11,9 @@ The one front door is the **Database session API**::
     handle = db.sql(LOGREG_SQL, wrt=("theta",))
     loss, grads = handle.step()
 
-See docs/session.md for the quickstart, the catalog/statistics
-semantics, and the migration table from the deprecated engine-level
-front door (``RAEngine`` / ``jit_execute`` / ``use_mesh``).
+See docs/session.md for the quickstart and the catalog/statistics
+semantics; the library-level staged executor underneath remains
+importable as ``repro.core.engine.RAEngine``.
 
 Exports are resolved lazily (PEP 562) so ``import repro`` stays free of
 jax device initialization.

@@ -346,11 +346,16 @@ class GradientProgram:
     environment must contain: the original inputs, ``__seed`` (output
     cotangent), and the ``__fwd_*`` cached intermediates produced by
     ``forward_with_cache``.
+
+    ``opts`` records the RJPOptions the program was derived under, so a
+    structural rewrite of the forward query (core/rewrite.py) can
+    re-derive the gradient graphs under identical settings.
     """
 
     forward: fra.Query
     grads: Dict[str, fra.Node]
     wrt: Tuple[str, ...]
+    opts: RJPOptions = DEFAULT_OPTS
 
     def grad_query(self, name: str) -> fra.Query:
         scans = tuple(
@@ -469,7 +474,7 @@ def ra_autodiff(
     missing = set(wrt) - set(grads)
     if missing:
         raise ValueError(f"wrt inputs not found in query: {missing}")
-    return GradientProgram(query, grads, tuple(wrt))
+    return GradientProgram(query, grads, tuple(wrt), opts)
 
 
 def _single_parent(node: fra.Node, order: List[fra.Node]) -> bool:

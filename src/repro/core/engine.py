@@ -55,6 +55,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import fra, kernels, planner
+from . import rewrite as _rewrite
 from .autodiff import GradientProgram
 from .relation import CooRelation, DenseRelation, pad_coo_nnz
 
@@ -105,22 +106,6 @@ class ReshardWarning(UserWarning):
             f"— or step through repro.Database, which auto-threads them — "
             f"to fold it into the plan. See Compiled.reshard_stats."
         )
-
-
-def _warn_shim(old: str, new: str, *, stacklevel: int = 3) -> None:
-    """Deprecation warning for the pre-session front-door API. The
-    warning is attributed to the *caller's* module, so the CI deprecation
-    lane (-W error::DeprecationWarning scoped to repro internals) proves
-    no in-repo code path still uses the shim while out-of-repo callers
-    get one release of grace."""
-    warnings.warn(
-        f"{old} is deprecated — use the repro.Database session API "
-        f"({new}) instead; this shim will be removed one release after "
-        f"the session API landed (see docs/session.md for the migration "
-        f"table)",
-        DeprecationWarning,
-        stacklevel=stacklevel,
-    )
 
 
 # ---------------------------------------------------------------------------
@@ -317,7 +302,7 @@ class Compiled:
     def planned_spec(self, name: str) -> Optional[P]:
         """The PartitionSpec this executable places relation ``name``'s
         payload array at (a DenseRelation's ``data`` / a CooRelation's
-        ``values``) — the layout a ``committed_layouts``-style probe of
+        ``values``) — the layout a ``_committed_layouts``-style probe of
         this step's *inputs after placement* would report. ``compile_auto``
         compares it against an env's committed layouts to decide whether a
         recorded plan still applies without any rechunk."""
@@ -465,10 +450,15 @@ class Lowered:
     physical plan + jit.
 
     Cache-key semantics: the engine caches Lowereds under ``(sig,
-    dispatch)`` where ``sig`` is ``env_signature(env, seed)`` — relation
-    structure, key arities, shapes, dtypes — and ``dispatch`` is the
-    (hashable) DispatchTable. Two environments with equal signatures share
-    a Lowered; a different tier table never does."""
+    dispatch, rewrite-key)`` where ``sig`` is ``env_signature(env, seed)``
+    — relation structure, key arities, shapes, dtypes — ``dispatch`` is
+    the (hashable) DispatchTable, and the rewrite key is the enabled
+    ``rewrite.RuleSet`` plus the quantized statistics snapshot the cost
+    gate read (None when the rewrite stage is off). Two environments with
+    equal signatures share a Lowered; a different tier table — or a
+    statistics shift large enough to cross a quantization bucket and flip
+    a gate — never does, so rewrite decisions are bit-stable like
+    committed layouts."""
 
     def __init__(
         self,
@@ -479,11 +469,19 @@ class Lowered:
         abstract_seed,
         out_shape,
         resolutions: Dict[str, str],
+        program: Optional[Program] = None,
+        rewrite_report: Optional[_rewrite.RewriteReport] = None,
     ):
         self.engine = engine
         self.sig = sig
         #: the kernel tier table this lowering resolved against.
         self.dispatch = dispatch
+        #: the program this lowering executes: the engine's program as
+        #: rewritten by the cost-gated rewrite stage (core/rewrite.py),
+        #: or the engine's own program when the stage was off/declined.
+        self.program: Program = engine.program if program is None else program
+        #: gate decisions of the rewrite stage (None when it was off).
+        self.rewrite_report = rewrite_report
         self.abstract_env = abstract_env
         self.abstract_seed = abstract_seed
         #: pytree of ShapeDtypeStruct-leaved relations: the program output.
@@ -501,7 +499,9 @@ class Lowered:
 
     def eager(self, env: Env, seed: Optional[AnyRel] = None):
         """Un-jitted execution (re-walks the graph; debugging only)."""
-        return self.engine._execute(env, seed, dispatch=self.dispatch)
+        return self.engine._execute(
+            env, seed, dispatch=self.dispatch, program=self.program
+        )
 
     def compile(
         self,
@@ -535,7 +535,7 @@ class Lowered:
         multiple (``relation.owner_partition`` / ``pad_coo_nnz``) so
         ``pad_nnz`` stays empty and donation reaches the real buffers.
         ``committed`` maps relation names to the PartitionSpec their
-        arrays are already committed to (``committed_layouts(env)``
+        arrays are already committed to (``_committed_layouts(env)``
         derives it): the planner then charges candidates that would force
         a device-layout rechunk, instead of ``Compiled.__call__`` paying
         the all-to-all silently (it still counts such moves on
@@ -576,7 +576,11 @@ class Lowered:
         # --- plan: the distribution planner picks a JoinPlan per join ----
         # (planner._rel_bytes reads sizes off relations whose payloads are
         # ShapeDtypeStructs, so the abstract env is a valid stats source)
-        fwd_query = self.engine.forward_query
+        fwd_query = (
+            self.program.forward
+            if isinstance(self.program, GradientProgram)
+            else self.program
+        )
         plans = planner.plan_query(
             fwd_query,
             self.abstract_env,
@@ -591,6 +595,7 @@ class Lowered:
         # --- jit: plans become in_shardings, XLA inserts the collectives -
         engine = self.engine
         table = self.dispatch
+        program = self.program
 
         jit_kwargs: Dict[str, Any] = {"donate_argnums": (0,)} if donate else {}
         shardings = None
@@ -630,7 +635,7 @@ class Lowered:
                     rel.owner_dim,
                     rel.shard_offsets,
                 )
-            return engine._execute(env, seed, dispatch=table)
+            return engine._execute(env, seed, dispatch=table, program=program)
 
         compiled = Compiled(
             self,
@@ -660,10 +665,10 @@ class Lowered:
     ) -> Compiled:
         """``compile`` with committed layouts auto-threaded and a
         **plan-stability guarantee** — the PR-4 follow-up ("auto-thread
-        committed layouts through jit_execute without plan-flapping").
+        committed layouts through the staged path without plan-flapping").
 
         The committed layouts of ``env``'s arrays are derived per call
-        (``committed_layouts``) and folded into planning, but the record
+        (``_committed_layouts``) and folded into planning, but the record
         of the plan last committed to is kept here: when every committed
         input already sits at that plan's own placement — the steady
         state once a step's outputs feed the next call — the recorded
@@ -774,25 +779,12 @@ class RAEngine:
     """Staged executor for an FRA query, bare gradient-graph root, or
     GradientProgram. Holds the lowering cache and the trace counter.
 
-    Direct construction is a deprecated shim over the ``repro.Database``
-    session API (one release of grace): sessions own the engine registry,
-    the catalog statistics the planner reads, and the committed-layout
-    record — ``db.query(...)`` / ``db.sql(...)`` are the front door. The
-    class itself remains the internal staged executor underneath."""
+    This is the library-level staged executor; the ``repro.Database``
+    session API (``db.query(...)`` / ``db.sql(...)``) layers the catalog
+    — tracked statistics, committed layouts, the active mesh — on top of
+    it and is the recommended front door for catalog-backed work."""
 
     def __init__(self, program: Program, *, fuse_join_agg: bool = True):
-        _warn_shim("RAEngine(...)", "db.query(...) / db.sql(...)")
-        self._init(program, fuse_join_agg)
-
-    @classmethod
-    def _create(cls, program: Program, *, fuse_join_agg: bool = True):
-        """Internal constructor (no deprecation warning) — the session /
-        ``engine_for`` path."""
-        self = object.__new__(cls)
-        self._init(program, fuse_join_agg)
-        return self
-
-    def _init(self, program: Program, fuse_join_agg: bool) -> None:
         self.source = program
         self.fuse_join_agg = fuse_join_agg
         #: number of actual FRA-graph walks (eager calls + jit traces).
@@ -825,22 +817,28 @@ class RAEngine:
         seed: Optional[AnyRel] = None,
         dispatch: Optional[kernels.DispatchTable] = None,
         resolutions: Optional[Dict[str, str]] = None,
+        program: Optional[Program] = None,
     ):
+        """Walk the program's FRA graph(s) over ``env`` (eagerly or under
+        a jax trace). ``program`` overrides the engine's own program —
+        the handle a ``Lowered`` uses to execute the *rewritten* program
+        its cache entry lowered (core/rewrite.py) while sharing this
+        engine's trace counter and fuse flag."""
         from . import compiler
 
         self.trace_count += 1
-        if self.kind == "query":
+        prog = self.program if program is None else program
+        if not isinstance(prog, GradientProgram):
             if seed is not None:
                 raise ValueError("seed is only meaningful for GradientPrograms")
             return compiler._execute_graph(
-                self.program.root,
+                prog.root,
                 env,
                 fuse_join_agg=self.fuse_join_agg,
                 dispatch=dispatch,
                 resolutions=resolutions,
             )
 
-        prog = self.program
         fwd_cache: Env = {}
         out = compiler._execute_graph(
             prog.forward.root,
@@ -878,32 +876,70 @@ class RAEngine:
         return self._execute(env, seed, dispatch=table)
 
     def lower(
-        self, env: Env, seed: Optional[AnyRel] = None, *, dispatch=None
+        self,
+        env: Env,
+        seed: Optional[AnyRel] = None,
+        *,
+        dispatch=None,
+        stats: Optional[Dict[str, planner.RelationStats]] = None,
+        rewrite=None,
     ) -> Lowered:
         """Trace the chunked lowering at ``env``'s shapes under a kernel
         DispatchTable (``dispatch`` accepts anything ``kernels.make_table``
         does; None → backend default). Cached: a second call with an
-        identical (signature, table) pair returns the same Lowered without
-        re-walking the graph; switching tiers is a cache miss and
-        re-lowers."""
+        identical (signature, table, rewrite-key) triple returns the same
+        Lowered without re-walking the graph; switching tiers is a cache
+        miss and re-lowers.
+
+        ``rewrite`` enables the cost-gated algebraic rewrite stage
+        (core/rewrite.py) ahead of planning: anything
+        ``rewrite.make_rules`` accepts — True for the default rule set, a
+        ``RuleSet``, an iterable of rule names; None/False (default)
+        skips the stage. ``stats`` is the catalog statistics snapshot the
+        cost gate prices pushdowns with (also what sharpens the planner's
+        estimates at compile time); its quantized form joins the enabled
+        RuleSet in the cache key, so a statistics shift that could flip a
+        gate re-lowers while same-bucket refreshes hit the cache. The
+        rewritten program (and the gate report) live on the returned
+        ``Lowered`` — declined rewrites keep the engine's original
+        program object, bit-identical to a rewrite-off lowering."""
         table = kernels.make_table(dispatch)
+        rules = _rewrite.make_rules(rewrite)
+        rw_key = None if rules is None else (rules, _stats_key(stats))
         sig = env_signature(env, seed)
-        key = (sig, table)
+        key = (sig, table, rw_key)
         hit = self._lowered.get(key)
         if hit is not None:
             return hit
         abstract_env = {k: _abstract(v) for k, v in env.items()}
         abstract_seed = None if seed is None else _abstract(seed)
+        program = None
+        report = None
+        if rules is not None:
+            program, report = _rewrite.rewrite_program(
+                self.program, abstract_env, stats=stats, rules=rules
+            )
         resolutions: Dict[str, str] = {}
         out_shape = jax.eval_shape(
             functools.partial(
-                self._execute, dispatch=table, resolutions=resolutions
+                self._execute,
+                dispatch=table,
+                resolutions=resolutions,
+                program=program,
             ),
             abstract_env,
             abstract_seed,
         )
         low = Lowered(
-            self, sig, table, abstract_env, abstract_seed, out_shape, resolutions
+            self,
+            sig,
+            table,
+            abstract_env,
+            abstract_seed,
+            out_shape,
+            resolutions,
+            program=program,
+            rewrite_report=report,
         )
         self._lowered[key] = low
         return low
@@ -917,7 +953,7 @@ _ENGINES: "OrderedDict[Tuple[int, bool], RAEngine]" = OrderedDict()
 _MAX_ENGINES = 256
 
 #: ambient-mesh stack; a ContextVar so concurrent threads / tasks (e.g. a
-#: serving worker pool) each see only their own use_mesh nesting.
+#: serving worker pool) each see only their own mesh-context nesting.
 _MESH_STACK: "contextvars.ContextVar[Tuple[Any, ...]]" = contextvars.ContextVar(
     "repro_engine_mesh_stack", default=()
 )
@@ -941,29 +977,9 @@ def _use_mesh(mesh):
         _MESH_STACK.reset(token)
 
 
-def use_mesh(mesh):
-    """Deprecated shim: make ``mesh`` the ambient mesh of every staged
-    execution in the block. The session API owns the active mesh now —
-    ``with repro.Database(mesh="host:2").activate():`` is the one way to
-    run the relational operator layer (``rel_matmul``, ``gcn_conv``,
-    ``rel_embed``) distributed::
-
-        with use_mesh("host:2"):      # deprecated
-            y = rel_matmul(x, w)
-
-        with repro.Database(mesh="host:2").activate():   # session API
-            y = rel_matmul(x, w)
-    """
-    # Not a @contextmanager itself: warning at *call* time keeps the
-    # caller's module attribution (a generator would attribute the
-    # warning to contextlib's __enter__, hiding it from the CI
-    # deprecation gate's repro-module filter).
-    _warn_shim('use_mesh(mesh)', 'Database(mesh=...).activate()')
-    return _use_mesh(mesh)
-
-
 def default_mesh():
-    """The innermost ``use_mesh`` mesh, or None."""
+    """The innermost ambient (``_use_mesh`` / session-activated) mesh,
+    or None."""
     stack = _MESH_STACK.get()
     return stack[-1] if stack else None
 
@@ -987,15 +1003,6 @@ def _committed_layouts(env: Env) -> Dict[str, P]:
     return out
 
 
-def committed_layouts(env: Env) -> Dict[str, P]:
-    """Deprecated shim over the session's automatic committed-layout
-    threading: ``Lowered.compile_auto`` (and every ``Database`` step)
-    derives and folds these layouts per call, so manual derivation is no
-    longer needed."""
-    _warn_shim("committed_layouts(env)", "db.query(...) auto-threads layouts")
-    return _committed_layouts(env)
-
-
 def engine_for(program: Program, *, fuse_join_agg: bool = True) -> RAEngine:
     """Engine per (program identity, fuse flag), LRU-bounded. The engine
     holds a strong reference to the program, so the id key cannot be
@@ -1006,7 +1013,7 @@ def engine_for(program: Program, *, fuse_join_agg: bool = True) -> RAEngine:
     if eng is not None and eng.source is program:
         _ENGINES.move_to_end(key)
         return eng
-    eng = RAEngine._create(program, fuse_join_agg=fuse_join_agg)
+    eng = RAEngine(program, fuse_join_agg=fuse_join_agg)
     _ENGINES[key] = eng
     while len(_ENGINES) > _MAX_ENGINES:
         _ENGINES.popitem(last=False)
@@ -1042,45 +1049,22 @@ def _staged_execute(
     dispatch=None,
     stats: Optional[Dict[str, planner.RelationStats]] = None,
     mem_budget: float = planner.DEFAULT_MEM_BUDGET,
+    rewrite=None,
 ):
     """lower → plan → compile → run in one call, with every stage cached:
-    per-program engine, per-(signature, dispatch-table) Lowered, per-mesh
-    ``compile_auto`` record (committed layouts folded without
-    plan-flapping). The internal staged hot path ``Database.execute`` and
-    the relational operator layer step through; ``mesh=None`` picks up
-    the ambient mesh (session / legacy ``use_mesh``) outside traces."""
+    per-program engine, per-(signature, dispatch-table, rewrite-key)
+    Lowered, per-mesh ``compile_auto`` record (committed layouts folded
+    without plan-flapping). The internal staged hot path
+    ``Database.execute`` and the relational operator layer step through;
+    ``mesh=None`` picks up the ambient (session-activated) mesh outside
+    traces; ``rewrite`` enables the cost-gated rewrite stage (anything
+    ``rewrite.make_rules`` accepts)."""
     if mesh is None:
         mesh = _ambient_mesh()
     eng = engine_for(program, fuse_join_agg=fuse_join_agg)
-    compiled = eng.lower(env, seed, dispatch=dispatch).compile_auto(
+    compiled = eng.lower(
+        env, seed, dispatch=dispatch, stats=stats, rewrite=rewrite
+    ).compile_auto(
         env, mesh=mesh, donate=donate, stats=stats, mem_budget=mem_budget
     )
     return compiled(env, seed)
-
-
-def jit_execute(
-    program: Program,
-    env: Env,
-    seed: Optional[AnyRel] = None,
-    *,
-    mesh=None,
-    donate: Tuple[str, ...] = (),
-    fuse_join_agg: bool = True,
-    dispatch=None,
-):
-    """Deprecated shim: the one-call staged execution now lives on the
-    session — ``repro.Database`` resolves the mesh, dispatch table and
-    catalog statistics itself (``db.execute`` for anonymous environments,
-    ``db.query``/``db.sql`` for catalog-backed ones). Unlike the historical
-    behavior this shim threads committed layouts via ``compile_auto``, so
-    repeated calls on a committed-layout env no longer silently reshard."""
-    _warn_shim("jit_execute(...)", "db.execute(...) / db.query(...)")
-    return _staged_execute(
-        program,
-        env,
-        seed,
-        mesh=mesh,
-        donate=donate,
-        fuse_join_agg=fuse_join_agg,
-        dispatch=dispatch,
-    )

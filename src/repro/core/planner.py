@@ -56,6 +56,12 @@ DATA_AXIS_NAMES = ("pod", "data")
 #: per-dropped-key Agg heuristic and is kept as the stats-less fallback.
 EDGE_CUT_LOCAL = 0.125
 
+#: equi-width buckets per key column in ``RelationStats.hist`` (see
+#: ``relation.measure_stats``) — coarse on purpose: the histograms only
+#: feed the rewrite stage's join output-size estimate, and a snapshot of
+#: them rides in the lowering cache key.
+HIST_BUCKETS = 8
+
 
 @dataclass(frozen=True)
 class RelationStats:
@@ -73,6 +79,12 @@ class RelationStats:
     * ``nnz`` — live (non-padded) tuple count; for a DenseRelation this
       is the full grid size.
     * ``density`` — ``nnz / prod(extents)``; 1.0 for dense grids.
+    * ``hist`` — optional per-key-column equi-width histograms
+      (``HIST_BUCKETS`` tuple counts over ``[0, extents[i])``), refreshed
+      on ``Database.put``. The rewrite stage's cost gate overlaps two
+      columns' histograms to sharpen the join output-size estimate that
+      decides a Σ-pushdown; ``None`` falls back to the extent/distinct
+      heuristics, bit-identically to a stats-less plan.
 
     Frozen and tuple-valued so a stats snapshot is hashable — it is part
     of the ``Lowered.compile`` cache key."""
@@ -81,6 +93,7 @@ class RelationStats:
     extents: Tuple[int, ...]
     nnz: int
     density: float = 1.0
+    hist: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def quantized(self) -> "RelationStats":
         """Counts bucketed to powers of two (extents kept exact) — the
@@ -102,6 +115,11 @@ class RelationStats:
             extents=self.extents,
             nnz=nnz,
             density=(nnz / size) if size else 0.0,
+            hist=(
+                tuple(tuple(q(c) for c in col) for col in self.hist)
+                if self.hist is not None
+                else None
+            ),
         )
 
     def edge_cut(self, owner_dim: int, num_shards: int) -> float:
@@ -597,56 +615,79 @@ def _spec_dims(spec, geo: MeshGeometry) -> Optional[Dict[str, Optional[int]]]:
     return {"model": model, "data": data}
 
 
-def plan_query(
-    query: fra.Query,
+@dataclass
+class GraphEstimate:
+    """Bottom-up size/statistics estimates over one FRA graph — the walk
+    ``plan_query`` prices joins with, extracted so the rewrite stage
+    (``core/rewrite.py``) gates its rules on the *same* numbers the
+    planner would later see. All maps are keyed by node id.
+
+    * ``sizes`` — estimated bytes per node (join-agg semantics: a Join is
+      at most its big side, a Σ divides its child by the dropped keys'
+      measured domains or the 1/8-per-key fallback).
+    * ``is_coo`` — whether the node's subtree is COO-keyed.
+    * ``dist`` — per key position, estimated distinct values (None = no
+      statistics reached this node / position).
+    * ``hists`` — per key position, the equi-width histogram propagated
+      from ``RelationStats.hist`` (None wherever unavailable); only the
+      rewrite gate consumes these.
+    * ``stat_aggs`` — Agg node ids whose size came from statistics.
+    * ``agg_of`` — Join id → the Agg sitting directly above it.
+    * ``joins`` — Join nodes in topo (leaves-first) order.
+    """
+
+    sizes: Dict[int, float]
+    is_coo: Dict[int, bool]
+    dist: Dict[int, Optional[Tuple[Optional[float], ...]]]
+    hists: Dict[int, Optional[Tuple[Optional[Tuple[int, ...]], ...]]]
+    stat_aggs: set
+    agg_of: Dict[int, "fra.Agg"]
+    joins: List["fra.Join"]
+
+
+def agg_shrink(
+    child_arity: int,
+    grp,
+    child_dist: Optional[Tuple[Optional[float], ...]],
+) -> Tuple[float, bool]:
+    """The Σ output-size rule shared by ``estimate_graph`` and the
+    rewrite cost gate: ``(shrink_factor, from_stats)`` such that the Agg
+    output is ``child_bytes / shrink_factor``. With statistics covering
+    every dropped key position the factor is the product of their
+    measured domains; otherwise the flat 1/8-per-dropped-key fallback."""
+    kept = {c.idx for c in grp.comps if isinstance(c, In)}
+    dropped_pos = [i for i in range(child_arity) if i not in kept]
+    if (
+        child_dist is not None
+        and dropped_pos
+        and all(child_dist[i] is not None for i in dropped_pos)
+    ):
+        factor = 1.0
+        for i in dropped_pos:
+            factor *= max(1.0, float(child_dist[i]))
+        return factor, True
+    return 8.0 ** len(dropped_pos), False
+
+
+def estimate_graph(
+    root: fra.Node,
     env: Dict[str, object],
-    n_devices: int,
-    mem_budget: float = DEFAULT_MEM_BUDGET,
-    *,
-    geometry: Optional[MeshGeometry] = None,
-    committed: Optional[Dict[str, P]] = None,
     stats: Optional[Dict[str, RelationStats]] = None,
-) -> Dict[int, JoinPlan]:
-    """Walk the query graph, estimate relation sizes bottom-up, and emit a
-    JoinPlan per Join node (keyed by node id). ``geometry`` plans for a
-    2-D (data × model) mesh (see ``MeshGeometry.from_mesh``); omitted, it
-    is the legacy 1-D model-axis-only geometry over ``n_devices``.
-
-    CooRelation leaves are planned for real: the walk tracks which
-    subtrees are COO-keyed, and ``plan_join`` may place a join's COO nnz
-    rows on the data axes (``data:shard_nnz_*``), costing the Σ's
-    psum_scatter at the owner-partition edge-cut estimate.
-
-    ``committed`` maps base-relation names to the PartitionSpec their
-    arrays are already committed to (see ``engine.committed_layouts``);
-    candidates that would force a device-layout rechunk then pay the
-    all-to-all in the cost table instead of hiding it in
-    ``Compiled.__call__``'s device_put.
-
-    ``stats`` maps base-relation names to tracked ``RelationStats`` (the
-    catalog snapshot — ``Database.catalog.snapshot()``). When present,
-    per-key distinct counts are propagated through the graph and replace
-    three heuristics: a Σ's output size divides the child by the dropped
-    keys' *measured* domains (not a flat 1/8 per key), the Σ-over-COO
-    scatter's edge cut is priced from the owner column's distinct count
-    (not the ``EDGE_CUT_LOCAL`` constant), and the stats-backed Σ output
-    estimate is trusted without the defensive dense-side cap. Relations
-    missing from ``stats`` fall back to the old heuristics, so a
-    stats-less call plans bit-identically to earlier releases."""
-    geo = geometry or MeshGeometry.single(n_devices)
+) -> GraphEstimate:
+    """Walk ``root`` leaves-first and estimate per-node sizes, COO-ness,
+    and (with a catalog snapshot) distinct counts and histograms. This is
+    the cost model both ``plan_query`` and the rewrite stage's gate read;
+    stats-less calls reproduce the legacy heuristics bit-for-bit."""
     sizes: Dict[int, float] = {}
     is_coo: Dict[int, bool] = {}
     agg_of: Dict[int, fra.Agg] = {}
     joins: List[fra.Join] = []
-    #: per-node tuple of estimated distinct values per key position
-    #: (None = no statistics reached this node); entries may be None for
-    #: individually unknown positions (e.g. literal key components).
     dist: Dict[int, Optional[Tuple[Optional[float], ...]]] = {}
-    #: Agg nodes whose size estimate came from statistics (trustworthy
-    #: enough to skip the dense-side segment-grid cap).
+    hists: Dict[int, Optional[Tuple[Optional[Tuple[int, ...]], ...]]] = {}
     stat_aggs: set = set()
 
-    for node in query.root.topo():
+    for node in root.topo():
+        hists[node.id] = None
         if isinstance(node, (fra.TableScan, fra.Const)):
             ref = node.name if isinstance(node, fra.TableScan) else node.ref
             if ref in env:
@@ -659,6 +700,8 @@ def plan_query(
             dist[node.id] = (
                 tuple(float(d) for d in st.distinct) if st is not None else None
             )
+            if st is not None and st.hist is not None:
+                hists[node.id] = tuple(st.hist)
         elif isinstance(node, fra.Select):
             sizes[node.id] = sizes[node.child.id]
             is_coo[node.id] = is_coo[node.child.id]
@@ -671,25 +714,20 @@ def plan_query(
                 if cd is not None
                 else None
             )
+            ch = hists.get(node.child.id)
+            if ch is not None:
+                hists[node.id] = tuple(
+                    ch[c.idx] if isinstance(c, In) else None
+                    for c in node.proj.comps
+                )
         elif isinstance(node, fra.Agg):
             child = sizes[node.child.id]
-            dropped = max(0, node.child.key_arity - node.key_arity)
             cd = dist.get(node.child.id)
-            kept = {c.idx for c in node.grp.comps if isinstance(c, In)}
-            dropped_pos = [
-                i for i in range(node.child.key_arity) if i not in kept
-            ]
-            if (
-                cd is not None
-                and dropped_pos
-                and all(cd[i] is not None for i in dropped_pos)
-            ):
+            factor, from_stats = agg_shrink(node.child.key_arity, node.grp, cd)
+            if from_stats:
                 # catalog statistics: a Σ dropping key position i merges
                 # its distinct[i] values into one group — the measured
                 # replacement for the flat 1/8-per-dropped-key guess
-                factor = 1.0
-                for i in dropped_pos:
-                    factor *= max(1.0, float(cd[i]))
                 sizes[node.id] = child / factor
                 stat_aggs.add(node.id)
                 dist[node.id] = tuple(
@@ -698,8 +736,9 @@ def plan_query(
                 )
             else:
                 # no statistics: assume a 1/8 reduction per dropped key
-                sizes[node.id] = child / (8.0 ** dropped)
+                sizes[node.id] = child / factor
                 dist[node.id] = None
+            # grouping rescales bucket counts unpredictably: drop hists
             is_coo[node.id] = False  # Σ over COO materializes the grid
             if isinstance(node.child, fra.Join):
                 agg_of[node.child.id] = node
@@ -721,6 +760,14 @@ def plan_query(
                 else:
                     comps_dist.append(None)
             dist[node.id] = tuple(comps_dist)
+            lh, rh = hists.get(node.left.id), hists.get(node.right.id)
+            if lh is not None or rh is not None:
+                hists[node.id] = tuple(
+                    lh[c.idx] if isinstance(c, L) and lh is not None
+                    else rh[c.idx] if isinstance(c, R) and rh is not None
+                    else None
+                    for c in node.proj.comps
+                )
         elif isinstance(node, fra.Restrict):
             sizes[node.id] = sizes[node.children[0].id]
             is_coo[node.id] = is_coo[node.ref.id]
@@ -730,6 +777,53 @@ def plan_query(
             sizes[node.id] = sizes[node.children[0].id]
             is_coo[node.id] = is_coo[node.left.id] and is_coo[node.right.id]
             dist[node.id] = dist.get(node.left.id) or dist.get(node.right.id)
+
+    return GraphEstimate(sizes, is_coo, dist, hists, stat_aggs, agg_of, joins)
+
+
+def plan_query(
+    query: fra.Query,
+    env: Dict[str, object],
+    n_devices: int,
+    mem_budget: float = DEFAULT_MEM_BUDGET,
+    *,
+    geometry: Optional[MeshGeometry] = None,
+    committed: Optional[Dict[str, P]] = None,
+    stats: Optional[Dict[str, RelationStats]] = None,
+) -> Dict[int, JoinPlan]:
+    """Walk the query graph, estimate relation sizes bottom-up, and emit a
+    JoinPlan per Join node (keyed by node id). ``geometry`` plans for a
+    2-D (data × model) mesh (see ``MeshGeometry.from_mesh``); omitted, it
+    is the legacy 1-D model-axis-only geometry over ``n_devices``.
+
+    CooRelation leaves are planned for real: the walk tracks which
+    subtrees are COO-keyed, and ``plan_join`` may place a join's COO nnz
+    rows on the data axes (``data:shard_nnz_*``), costing the Σ's
+    psum_scatter at the owner-partition edge-cut estimate.
+
+    ``committed`` maps base-relation names to the PartitionSpec their
+    arrays are already committed to (see ``engine._committed_layouts``);
+    candidates that would force a device-layout rechunk then pay the
+    all-to-all in the cost table instead of hiding it in
+    ``Compiled.__call__``'s device_put.
+
+    ``stats`` maps base-relation names to tracked ``RelationStats`` (the
+    catalog snapshot — ``Database.catalog.snapshot()``). When present,
+    per-key distinct counts are propagated through the graph and replace
+    three heuristics: a Σ's output size divides the child by the dropped
+    keys' *measured* domains (not a flat 1/8 per key), the Σ-over-COO
+    scatter's edge cut is priced from the owner column's distinct count
+    (not the ``EDGE_CUT_LOCAL`` constant), and the stats-backed Σ output
+    estimate is trusted without the defensive dense-side cap. Relations
+    missing from ``stats`` fall back to the old heuristics, so a
+    stats-less call plans bit-identically to earlier releases."""
+    geo = geometry or MeshGeometry.single(n_devices)
+    est = estimate_graph(query.root, env, stats)
+    sizes = est.sizes
+    is_coo = est.is_coo
+    agg_of = est.agg_of
+    joins = est.joins
+    stat_aggs = est.stat_aggs
 
     def owner_dim_of(n) -> Optional[int]:
         name = _leaf_name(n)

@@ -213,22 +213,39 @@ def measure_stats(rel):
     refreshes on ``put``.
 
     DenseRelation key sets are full grids, so every statistic is exact
-    and free (distinct = extents, density = 1). CooRelation key columns
-    are counted with ``np.unique`` over the live (non-padded) rows — a
-    host-side pass over concrete key arrays, i.e. a data-loading step
-    like ``owner_partition``, never a traced one."""
-    from .planner import RelationStats
+    and free (distinct = extents, density = 1, and each histogram bucket
+    holds its share of the uniform grid). CooRelation key columns are
+    counted with ``np.unique`` / ``np.histogram`` over the live
+    (non-padded) rows — a host-side pass over concrete key arrays, i.e.
+    a data-loading step like ``owner_partition``, never a traced one."""
+    from .planner import HIST_BUCKETS, RelationStats
+
+    def column_hist(values, extent, per_value=1):
+        """Equi-width tuple counts over ``[0, extent)``."""
+        if extent <= 0:
+            return tuple([0] * HIST_BUCKETS)
+        counts, _ = np.histogram(
+            values, bins=HIST_BUCKETS, range=(0, extent)
+        )
+        return tuple(int(c) * int(per_value) for c in counts)
 
     if isinstance(rel, DenseRelation):
         extents = rel.extents
         size = 1
         for e in extents:
             size *= int(e)
+        hist = tuple(
+            column_hist(
+                np.arange(int(e)), int(e), size // int(e) if int(e) else 0
+            )
+            for e in extents
+        )
         return RelationStats(
             distinct=tuple(int(e) for e in extents),
             extents=tuple(int(e) for e in extents),
             nnz=size,
             density=1.0,
+            hist=hist,
         )
     if isinstance(rel, CooRelation):
         keys = np.asarray(rel.keys)
@@ -241,11 +258,16 @@ def measure_stats(rel):
         size = 1
         for e in rel.extents:
             size *= int(e)
+        hist = tuple(
+            column_hist(live[:, j], int(rel.extents[j]))
+            for j in range(rel.key_arity)
+        )
         return RelationStats(
             distinct=distinct,
             extents=tuple(int(e) for e in rel.extents),
             nnz=nnz,
             density=(nnz / size) if size else 0.0,
+            hist=hist,
         )
     raise TypeError(f"measure_stats: not a relation: {type(rel)}")
 

@@ -32,9 +32,11 @@ snapshot that replaces the planner's Agg-size / edge-cut heuristics, the
 session mesh, the dispatch table, and the committed-layout record that
 guarantees plan stability across calls (``Lowered.compile_auto``).
 
-The pre-session front door — ``RAEngine``, ``jit_execute``, ``use_mesh``,
-``committed_layouts`` — survives as a thin deprecated shim over this
-module for one release (see docs/session.md for the migration table).
+Sessions also run the cost-gated algebraic rewrite stage
+(core/rewrite.py) ahead of planning — Σ-through-⋈ pushdown, Σ-split,
+common-subplan dedup, each priced against the catalog's tracked
+statistics — and ``db.explain(query)`` shows the before/after trees with
+every gate verdict.
 """
 
 from __future__ import annotations
@@ -50,6 +52,7 @@ import jax.numpy as jnp
 
 from . import engine as _engine
 from . import fra, kernels, planner
+from . import rewrite as _rewrite
 from . import sql as _sql
 from .autodiff import GradientProgram, ra_autodiff
 from .relation import CooRelation, DenseRelation, measure_stats
@@ -204,12 +207,16 @@ class Database:
 
     ``mesh`` is a jax Mesh, a ``launch/mesh.resolve_mesh`` spec string
     (``"host"``, ``"host:<model>"``, ``"production"``,
-    ``"production:multipod"``), or None (single-device; an ambient legacy
-    ``use_mesh`` still applies). ``dispatch`` takes anything
+    ``"production:multipod"``), or None (single-device; an ambient
+    session mesh still applies). ``dispatch`` takes anything
     ``kernels.make_table`` accepts and pins the kernel tier for every
-    query compiled in this session. ``max_cache_entries`` bounds the
-    session's executable cache (LRU) — the serving batch cache rides on
-    it; None = unbounded.
+    query compiled in this session. ``rewrite`` configures the
+    cost-gated algebraic rewrite stage run ahead of planning (anything
+    ``rewrite.make_rules`` accepts: True — the default — enables the
+    full rule set, False disables the stage, a ``rewrite.RuleSet`` or an
+    iterable of rule names selects rules). ``max_cache_entries`` bounds
+    the session's executable cache (LRU) — the serving batch cache rides
+    on it; None = unbounded.
     """
 
     def __init__(
@@ -219,9 +226,12 @@ class Database:
         dispatch=None,
         mem_budget: Optional[float] = None,
         fuse_join_agg: bool = True,
+        rewrite=True,
         max_cache_entries: Optional[int] = None,
     ) -> None:
         self.catalog = Catalog()
+        #: the session's enabled rewrite rules (None = stage off).
+        self.rewrite_rules = _rewrite.make_rules(rewrite)
         self._mesh_spec = mesh
         self._mesh_resolved = mesh is None or not isinstance(mesh, str)
         self._mesh = None if isinstance(mesh, str) else mesh
@@ -326,9 +336,9 @@ class Database:
 
     def _step_mesh(self):
         """Mesh a step should compile against: the session mesh — or the
-        ambient legacy ``use_mesh`` mesh — outside traces; None under an
-        active trace (the engine's ``_trace_clean`` probe is the single
-        source of that rule)."""
+        ambient mesh of an enclosing activated session — outside traces;
+        None under an active trace (the engine's ``_trace_clean`` probe
+        is the single source of that rule)."""
         if self.mesh is not None:
             return self.mesh if _engine._trace_clean() else None
         return _engine._ambient_mesh()
@@ -375,6 +385,45 @@ class Database:
                 )
         return QueryHandle(self, q, default_wrt=None if wrt is None else tuple(wrt))
 
+    def explain(self, q: Union[fra.Query, fra.Node]) -> str:
+        """What the rewrite stage would do to ``q`` against the current
+        catalog: the query tree before, every cost-gate verdict (with the
+        byte estimates the gate compared), and the tree after. Relations
+        and their tracked statistics are sourced from the catalog exactly
+        as ``forward``/``grad``/``step`` would source them, so the
+        verdicts shown are the ones a compiled step takes. Purely
+        observational — nothing is lowered, planned or cached."""
+        if isinstance(q, fra.Node):
+            q = fra.Query(
+                q, tuple(sorted({s.name for s in q.table_scans()}))
+            )
+        names = _base_names([q.root])
+        env = {n: self.get(n) for n in names}
+        stats = self.catalog.snapshot(names)
+        rules = (
+            self.rewrite_rules
+            if self.rewrite_rules is not None
+            else _rewrite.DEFAULT_RULES
+        )
+        rewritten, report = _rewrite.rewrite_query(
+            q, env, stats=stats, rules=rules
+        )
+        lines = ["before:"]
+        lines += ["  " + ln for ln in q.root.pretty().splitlines()]
+        lines.append("rewrite decisions:")
+        lines += ["  " + ln for ln in report.render().splitlines()]
+        if self.rewrite_rules is None:
+            lines.append("  (session rewrite stage is OFF: plan unchanged)")
+            lines.append("after: (unchanged)")
+        elif not report.changed:
+            lines.append("after: (unchanged)")
+        else:
+            lines.append("after:")
+            lines += [
+                "  " + ln for ln in rewritten.root.pretty().splitlines()
+            ]
+        return "\n".join(lines)
+
     # -- staged execution (the engine underneath) --------------------------
 
     def _compiled_for(
@@ -387,7 +436,13 @@ class Database:
         stats: Optional[Dict[str, planner.RelationStats]] = None,
     ):
         eng = _engine.engine_for(program, fuse_join_agg=self.fuse_join_agg)
-        low = eng.lower(env, seed, dispatch=self.dispatch)
+        low = eng.lower(
+            env,
+            seed,
+            dispatch=self.dispatch,
+            stats=stats,
+            rewrite=self.rewrite_rules,
+        )
         return low.compile_auto(
             env,
             mesh=self._step_mesh(),

@@ -3,8 +3,8 @@
 ``make_host_mesh`` / ``make_production_mesh`` build the (data × model)
 meshes the 2-D distribution planner (core/planner.py) reads its geometry
 from; ``resolve_mesh`` turns the spec strings accepted by
-``train.make_train_step`` / ``serving`` / ``core.engine.use_mesh`` into
-those meshes.
+``train.make_train_step`` / ``serving`` / ``repro.Database(mesh=...)``
+into those meshes.
 
 Defined as functions (never module-level constants) so importing this
 module never touches jax device state — jax locks the device count on

@@ -1,11 +1,32 @@
-"""tools/check_bench.py: a malformed baseline (missing metric key) must
-fail with the named key and file, not a bare KeyError."""
+"""tools/check_bench.py: malformed baselines (missing metric key, wrong
+top-level shape, list-valued metrics) must fail with the named file and
+row, not a bare KeyError/AttributeError."""
 
 import importlib.util
 import json
 import pathlib
 
+import pytest
+
 REPO = pathlib.Path(__file__).resolve().parent.parent
+
+#: one gated (CPU-stable) row per suite, so a well-formed fixture passes
+#: the "no gated metrics" guard for every suite in cb.SUITES.
+GATED_ROWS = {
+    "engine_overhead": [
+        {"name": "engine_overhead/x/compiled", "us_per_call": 100.0},
+        {"name": "engine_overhead/x/session", "us_per_call": 110.0},
+    ],
+    "kernel_dispatch": [
+        {"name": "kernel_dispatch/engine-x/jnp", "us_per_call": 50.0},
+    ],
+    "rjp_ablation": [
+        {"name": "rjp/all-opts", "us_per_call": 1200.0},
+        {"name": "rjp/no-join-agg-fusion", "us_per_call": 4500.0},
+        {"name": "rjp/pushdown-on", "us_per_call": 300.0},
+        {"name": "rjp/pushdown-off", "us_per_call": 900.0},
+    ],
+}
 
 
 def _load_module():
@@ -17,36 +38,77 @@ def _load_module():
     return mod
 
 
+def _write_all(cb, baselines, fresh, override=None):
+    baselines.mkdir(exist_ok=True)
+    for suite in cb.SUITES:
+        rows = (override or {}).get(suite, GATED_ROWS[suite])
+        (baselines / f"{suite}.json").write_text(json.dumps(rows))
+        (fresh / f"BENCH_{suite}.json").write_text(
+            json.dumps(GATED_ROWS[suite])
+        )
+
+
 def test_missing_metric_key_is_named(tmp_path):
     cb = _load_module()
     baselines = tmp_path / "baselines"
-    baselines.mkdir()
-    good = [{"name": "engine_overhead/x/compiled", "us_per_call": 1.0}]
     bad = [{"name": "engine_overhead/x/compiled"}]        # no us_per_call
-    (baselines / "engine_overhead.json").write_text(json.dumps(bad))
-    (baselines / "kernel_dispatch.json").write_text(json.dumps(good))
-    (tmp_path / "BENCH_engine_overhead.json").write_text(json.dumps(good))
-    (tmp_path / "BENCH_kernel_dispatch.json").write_text(json.dumps(good))
+    _write_all(cb, baselines, tmp_path, override={"engine_overhead": bad})
 
     errors = cb.check(baselines, tmp_path)
     joined = "\n".join(errors)
     assert "us_per_call" in joined                 # the missing key, named
     assert "engine_overhead.json" in joined        # the offending file
-    # the well-formed suite is still checked, not aborted by the bad one
-    assert any("kernel_dispatch" in e or "no gated" in e for e in errors) or (
-        len(errors) == 1
-    )
+    # the well-formed suites are still checked, not aborted by the bad one
+    assert len(errors) == 1
 
 
 def test_well_formed_baselines_pass(tmp_path):
     cb = _load_module()
     baselines = tmp_path / "baselines"
-    baselines.mkdir()
-    rows = [
-        {"name": "engine_overhead/x/compiled", "us_per_call": 100.0},
-        {"name": "kernel_dispatch/engine-x/jnp", "us_per_call": 50.0},
-    ]
-    for suite in cb.SUITES:
-        (baselines / f"{suite}.json").write_text(json.dumps(rows))
-        (tmp_path / f"BENCH_{suite}.json").write_text(json.dumps(rows))
+    _write_all(cb, baselines, tmp_path)
     assert cb.check(baselines, tmp_path) == []
+
+
+def test_every_suite_has_gated_fixture_rows():
+    """Keep GATED_ROWS in sync with cb.SUITES: each suite needs at least
+    one STABLE-matching name or the gate errors with 'no gated'."""
+    cb = _load_module()
+    for suite in cb.SUITES:
+        assert suite in GATED_ROWS
+        assert any(cb._is_stable(r["name"]) for r in GATED_ROWS[suite])
+
+
+def test_mapping_baselines_are_normalized(tmp_path):
+    """A hand-written {name: us} mapping baseline is accepted — this
+    shape used to crash the loader instead of being normalized."""
+    cb = _load_module()
+    baselines = tmp_path / "baselines"
+    mapping = {
+        "engine_overhead/x/compiled": 100.0,
+        "engine_overhead/x/session": {"us_per_call": 110.0},
+    }
+    _write_all(cb, baselines, tmp_path, override={"engine_overhead": mapping})
+    assert cb.check(baselines, tmp_path) == []
+
+
+@pytest.mark.parametrize(
+    "payload, fragment",
+    [
+        ("42", "expected a list"),                      # scalar top level
+        ('[["rjp/all-opts", 1.0]]', "row 0 is list"),   # non-object row
+        (
+            '[{"name": "rjp/all-opts", "us_per_call": [1.0]}]',
+            "non-numeric us_per_call",                   # list-valued metric
+        ),
+        ("{not json", "not valid JSON"),
+    ],
+)
+def test_malformed_baseline_shapes_name_the_file(tmp_path, payload, fragment):
+    cb = _load_module()
+    baselines = tmp_path / "baselines"
+    _write_all(cb, baselines, tmp_path)
+    (baselines / "rjp_ablation.json").write_text(payload)
+    errors = cb.check(baselines, tmp_path)
+    assert len(errors) == 1
+    assert "rjp_ablation.json" in errors[0]
+    assert fragment in errors[0]

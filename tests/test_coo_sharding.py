@@ -21,7 +21,7 @@ from repro.core.engine import (
     RAEngine,
     ReshardWarning,
     ShardFallbackWarning,
-    committed_layouts,
+    _committed_layouts,
 )
 from repro.core.kernels import ADD, MATMUL, MUL, SQUARE, SUM_CHUNK
 from repro.core.keys import (
@@ -510,7 +510,7 @@ def test_dense_fallback_emits_structured_warning():
 def test_reshard_stats_count_committed_moves_and_warn_once():
     """The silent-reshard fix: committed inputs arriving in a different
     layout are counted on Compiled.reshard_stats, warned about once per
-    cache entry, and foldable into the plan via committed_layouts."""
+    cache entry, and foldable into the plan via _committed_layouts."""
     mesh = make_host_mesh(model=2)
     rng = np.random.default_rng(6)
     n, m = 64, 8
@@ -527,7 +527,7 @@ def test_reshard_stats_count_committed_moves_and_warn_once():
     wrong = NamedSharding(mesh, P(None, None, "model", None))
     env_wrong = dict(env)
     env_wrong["A"] = DenseRelation(jax.device_put(env["A"].data, wrong), 2)
-    assert set(committed_layouts(env_wrong)) == {"A"}
+    assert set(_committed_layouts(env_wrong)) == {"A"}
     with pytest.warns(ReshardWarning):
         comp(env_wrong)
     nbytes = int(env["A"].data.nbytes)
@@ -539,7 +539,7 @@ def test_reshard_stats_count_committed_moves_and_warn_once():
     assert comp.reshard_stats["bytes_moved"] == 2 * nbytes
     assert comp.reshard_stats["calls"] == comp.reshard_stats["resharded_calls"] + 0
     # matching layouts move nothing
-    comp2 = low.compile(mesh=mesh, committed=committed_layouts(env))
+    comp2 = low.compile(mesh=mesh, committed=_committed_layouts(env))
     comp2(env)
     assert comp2.reshard_stats["last_call_bytes"] == 0
     # committed *replicated* inputs shard by a local slice — zero bytes

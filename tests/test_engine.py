@@ -20,7 +20,7 @@ import pytest
 
 from repro.core import compiler, fra, interpreter
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import RAEngine, engine_for, jit_execute
+from repro.core.engine import RAEngine, _staged_execute, engine_for
 from repro.core.kernels import ADD, LOGISTIC, MATMUL, MUL, XENT
 from repro.core.keys import (
     EMPTY_KEY,
@@ -134,12 +134,12 @@ def test_compiled_rejects_mismatched_signature():
         comp(other)
 
 
-def test_jit_execute_caches_engines():
+def test_staged_execute_caches_engines():
     q = matmul_query()
     assert engine_for(q) is engine_for(q)
     rng = np.random.default_rng(3)
     A, B, env = _matmul_env(rng)
-    out = jit_execute(q, env)
+    out = _staged_execute(q, env)
     np.testing.assert_allclose(to_blocked(out), A @ B, rtol=1e-8)
 
 

@@ -12,7 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import fra
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import RAEngine, use_mesh
+from repro.core.engine import RAEngine
 from repro.core.kernels import ADD, LOGISTIC, MATMUL, MUL, XENT
 from repro.core.keys import (
     EMPTY_KEY,
@@ -305,10 +305,11 @@ def test_compile_cache_distinguishes_mesh_geometries():
 
 @pytest.mark.spmd
 @requires8
-def test_relational_wrappers_under_use_mesh():
+def test_relational_wrappers_under_session_mesh():
     """The relational operator layer threads the canonical host mesh via
-    core.engine.use_mesh — forward and backward match the mesh-less
+    an activated session — forward and backward match the mesh-less
     result (the custom_vjp boundary takes no new arguments)."""
+    import repro
     from repro.relational.linear import rel_matmul_blocked
 
     rng = np.random.default_rng(2)
@@ -320,7 +321,7 @@ def test_relational_wrappers_under_use_mesh():
 
     ref = rel_matmul_blocked(x, w)
     gref = jax.grad(loss, argnums=(0, 1))(x, w)
-    with use_mesh("host:2"):
+    with repro.Database(mesh="host:2").activate():
         out = rel_matmul_blocked(x, w)
         g = jax.grad(loss, argnums=(0, 1))(x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)

@@ -1,0 +1,345 @@
+"""core/rewrite.py: the cost-gated factorized-evaluation stage.
+
+Properties under test:
+
+  * rewritten ≡ unrewritten oracle — forward *and* gradients — across
+    randomized multi-join Σ∘⋈ chains (hypothesis), whatever the gate
+    decides;
+  * skewed statistics flip the gate both ways: a wide middle key domain
+    fires the Σ-pushdown, a collapsed (distinct=1) one declines it;
+  * a declined gate is bit-identical: the engine lowers the *original*
+    program object and produces the same plans as rewrite-off;
+  * dedup merges structurally identical subplans without changing
+    results;
+  * ``Database.explain`` reports the decisions.
+
+The unrewritten gradient oracle for chains whose Σ drops a middle join
+key must run without join-agg fusion (``RJPOptions(False, True, True)``,
+``fuse_join_agg=False``): the fused derivation of those chains has no
+multiplicative RJP solution and does not lower — which is precisely the
+shape the rewrite exists to fix.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import compiler, engine, fra, rewrite
+from repro.core.autodiff import RJPOptions, ra_autodiff
+from repro.core.kernels import ADD, MUL
+from repro.core.keys import (
+    EMPTY_KEY, In, KeyFn, L, R, eq_pred, jproj, project_key,
+)
+from repro.core.planner import RelationStats
+from repro.core.relation import DenseRelation, measure_stats
+
+NO_FUSION = RJPOptions(False, True, True)
+
+
+def _dense(rng, *extents):
+    scale = 1.0 / np.sqrt(max(extents))
+    return DenseRelation(
+        jnp.asarray(rng.normal(size=extents).astype(np.float32) * scale),
+        len(extents),
+    )
+
+
+def _chain3(inner_keep=(0, 3)):
+    """loss = Σ_{()} Σ_{inner_keep} ((A ⋈ B) ⋈ C) — the 3-relation MUL
+    chain whose default inner Σ drops both middle join keys."""
+    j1 = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    j2 = fra.Join(
+        eq_pred((2, 0)), jproj(L(0), L(1), L(2), R(1)), MUL,
+        j1, fra.scan("C", 2),
+    )
+    loss = fra.Agg(EMPTY_KEY, ADD, fra.Agg(project_key(*inner_keep), ADD, j2))
+    return fra.Query(loss, inputs=("A", "B", "C"))
+
+
+def _chain3_env(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    env = {k: _dense(rng, n, n) for k in ("A", "B", "C")}
+    stats = {k: measure_stats(v) for k, v in env.items()}
+    return env, stats
+
+
+# ---------------------------------------------------------------------------
+# Randomized multi-join Σ∘⋈ chains: rewritten ≡ unrewritten oracle
+# ---------------------------------------------------------------------------
+
+
+def sigma_join_chain(seed):
+    """A seed-driven random k-join MUL chain capped by Σ(random keep)
+    then Σ→scalar, plus a dense env and its measured stats. Extents of 1
+    make the gate decline; extents of 3-4 with min_shrink 1.0 make it
+    fire — both paths are exercised across the seed sweep."""
+    rng = np.random.default_rng(seed)
+    n_joins = int(rng.integers(1, 4))
+    extents = [int(rng.integers(1, 5)) for _ in range(n_joins + 2)]
+
+    env = {"T0": _dense(rng, extents[0], extents[1])}
+    node: fra.Node = fra.scan("T0", 2)
+    for j in range(1, n_joins + 1):
+        name = f"T{j}"
+        env[name] = _dense(rng, extents[j], extents[j + 1])
+        a = node.key_arity
+        proj = tuple(L(i) for i in range(a)) + (R(1),)
+        node = fra.Join(
+            eq_pred((a - 1, 0)), jproj(*proj), MUL, node, fra.scan(name, 2)
+        )
+    n_keep = int(rng.integers(0, node.key_arity + 1))
+    keep = tuple(
+        int(i)
+        for i in rng.permutation(node.key_arity)[:n_keep]
+    )
+    node = fra.Agg(KeyFn(tuple(In(i) for i in keep)), ADD, node)
+    loss = fra.Agg(EMPTY_KEY, ADD, node)
+    q = fra.Query(loss, inputs=tuple(sorted(env)))
+    stats = {k: measure_stats(v) for k, v in env.items()}
+    min_shrink = float(rng.choice((1.0, 2.0, 4.0)))
+    return q, env, stats, rewrite.RuleSet(min_shrink=min_shrink)
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_rewritten_forward_matches_oracle(seed):
+    q, env, stats, rules = sigma_join_chain(seed)
+    rw, report = rewrite.rewrite_query(q, env, stats=stats, rules=rules)
+    want = compiler.execute(q.root, env)
+    got = compiler.execute(rw.root, env)
+    assert got.key_arity == want.key_arity
+    np.testing.assert_allclose(
+        np.asarray(got.data), np.asarray(want.data), rtol=1e-4, atol=1e-5
+    )
+    if not report.changed:
+        assert rw is q  # decline path returns the original object
+
+
+def _dict_env(env):
+    return {
+        name: {
+            k: float(v) for k, v in np.ndenumerate(np.asarray(rel.data))
+        }
+        for name, rel in env.items()
+    }
+
+
+@pytest.mark.parametrize("seed", range(30, 45))
+def test_rewritten_grad_matches_oracle(seed):
+    """Semantics preservation through autodiff, on the tuple-at-a-time
+    interpreter (the paper-semantics oracle, which evaluates any FRA
+    graph): gradients of the rewritten program equal gradients of the
+    unrewritten one. The compiled gradient path is covered by the
+    deterministic chain-3 / session tests below and the
+    ``rjp/pushdown-*`` benchmark lanes, on the shapes whose rewritten
+    derivation lowers."""
+    q, env, stats, rules = sigma_join_chain(seed)
+    denv = _dict_env(env)
+    # NO_FUSION is the only derivation valid for every unrewritten chain:
+    # the fused derivation of a Σ that drops a join key falls back to
+    # partial-RJP joins that not even the interpreter can merge.
+    oracle = ra_autodiff(q, opts=NO_FUSION)
+    loss_ref, g_ref = oracle.eval(denv)
+
+    prog = ra_autodiff(q)  # the production (default-opts) program
+    rw, report = rewrite.rewrite_program(prog, env, stats=stats, rules=rules)
+    if not report.changed:
+        assert rw is prog  # nothing fired/reverted: same program object
+        return
+    loss_rw, g_rw = rw.eval(denv)
+    assert loss_rw.get((), 0.0) == pytest.approx(
+        loss_ref.get((), 0.0), rel=1e-4, abs=1e-5
+    )
+    assert g_rw.keys() == g_ref.keys()
+    for name in g_ref:
+        ref, got = dict(g_ref[name]), dict(g_rw[name])
+        for key in set(ref) | set(got):
+            assert got.get(key, 0.0) == pytest.approx(
+                ref.get(key, 0.0), rel=1e-4, abs=1e-5
+            )
+
+
+# ---------------------------------------------------------------------------
+# The cost gate: skewed stats flip it both ways
+# ---------------------------------------------------------------------------
+
+
+def test_gate_fires_on_wide_middle_keys():
+    q = _chain3()
+    env, stats = _chain3_env(n=6)
+    rw, report = rewrite.rewrite_query(q, env, stats=stats)
+    assert report.changed and report.fired
+    assert "FIRED" in report.render()
+    # the join output is never materialized at full arity: every Σ sits
+    # directly on its join, and the 4-key intermediate is gone
+    arities = [n.key_arity for n in rw.root.topo()]
+    assert max(arities) < 4
+    want = compiler.execute(q.root, env)
+    got = compiler.execute(rw.root, env)
+    np.testing.assert_allclose(
+        np.asarray(got.data), np.asarray(want.data), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_gate_declines_on_collapsed_middle_keys():
+    """Same graph, skewed stats: every middle key column claims a single
+    distinct value, so pushing Σ down cannot shrink anything."""
+    q = _chain3()
+    env, _ = _chain3_env(n=6)
+    n = 6
+    skewed = {
+        name: RelationStats(
+            distinct=(1, 1), extents=(n, n), nnz=n * n, density=1.0
+        )
+        for name in ("A", "B", "C")
+    }
+    rw, report = rewrite.rewrite_query(q, env, stats=skewed)
+    assert not report.changed
+    assert rw is q
+    assert report.decisions, "gate should record its declined candidates"
+    assert all(not d.fired for d in report.decisions)
+    assert "declined" in report.render()
+
+
+def test_measured_stats_flip_gate_vs_skew():
+    """The *same* query and env rewrite differently purely on stats."""
+    q = _chain3()
+    env, measured = _chain3_env(n=6)
+    _, rep_wide = rewrite.rewrite_query(q, env, stats=measured)
+    skewed = {
+        k: RelationStats((1, 1), (6, 6), 36, 1.0) for k in ("A", "B", "C")
+    }
+    _, rep_skew = rewrite.rewrite_query(q, env, stats=skewed)
+    assert rep_wide.changed and not rep_skew.changed
+
+
+def test_declined_gate_is_bit_identical_through_the_engine():
+    """A declined rewrite lowers the engine's own program object and
+    produces the same physical plans as rewrite-off."""
+    # forward-only query: Σ drops a middle key of extent 1 → shrink 1×
+    j = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, j), inputs=("A", "B"))
+    rng = np.random.default_rng(0)
+    env = {"A": _dense(rng, 4, 1), "B": _dense(rng, 1, 4)}
+    stats = {k: measure_stats(v) for k, v in env.items()}
+
+    eng = engine.RAEngine(q)
+    low_on = eng.lower(env, stats=stats, rewrite=True)
+    low_off = eng.lower(env, rewrite=None)
+    assert low_on.program is eng.program  # decline → original object
+    assert low_on.rewrite_report is not None
+    assert not low_on.rewrite_report.changed
+    c_on, c_off = low_on.compile(), low_off.compile()
+    assert c_on.plans == c_off.plans
+    np.testing.assert_allclose(
+        np.asarray(c_on(env).data), np.asarray(c_off(env).data), rtol=1e-6
+    )
+
+
+def test_lower_cache_keys_on_rules_and_stats():
+    q = _chain3()
+    env, stats = _chain3_env(n=4)
+    eng = engine.RAEngine(q)
+    a = eng.lower(env, stats=stats, rewrite=True)
+    b = eng.lower(env, stats=stats, rewrite=True)
+    assert a is b  # same (sig, table, rules, stats snapshot) → cache hit
+    c = eng.lower(env, rewrite=None)
+    assert c is not a  # rewrite-off is a different cache entry
+    loose = rewrite.RuleSet(min_shrink=1e9)
+    d = eng.lower(env, stats=stats, rewrite=loose)
+    assert d is not a  # different gate threshold → different entry
+
+
+# ---------------------------------------------------------------------------
+# Dedup: common-subplan elimination
+# ---------------------------------------------------------------------------
+
+
+def _twin_branch_query():
+    def branch():
+        j = fra.Join(
+            eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MUL,
+            fra.scan("A", 2), fra.scan("B", 2),
+        )
+        return fra.Agg(project_key(0), ADD, j)
+
+    return fra.Query(
+        fra.Agg(EMPTY_KEY, ADD, fra.AddOp(branch(), branch())),
+        inputs=("A", "B"),
+    )
+
+
+def test_dedup_merges_identical_subplans():
+    q = _twin_branch_query()
+    rng = np.random.default_rng(3)
+    env = {"A": _dense(rng, 3, 3), "B": _dense(rng, 3, 3)}
+    rw, report = rewrite.rewrite_query(
+        q, env, rules=rewrite.RuleSet(rules=("dedup",))
+    )
+    assert report.changed
+    assert any(d.rule == "dedup" and d.fired for d in report.decisions)
+    assert len(rw.root.topo()) < len(q.root.topo())
+    add = next(n for n in rw.root.topo() if isinstance(n, fra.AddOp))
+    assert add.left is add.right  # one shared subplan, memoized once
+    want = compiler.execute(q.root, env)
+    got = compiler.execute(rw.root, env)
+    np.testing.assert_allclose(
+        np.asarray(got.data), np.asarray(want.data), rtol=1e-5
+    )
+
+
+def test_no_candidates_returns_original():
+    q = fra.Query(
+        fra.Agg(EMPTY_KEY, ADD, fra.scan("A", 2)), inputs=("A",)
+    )
+    rng = np.random.default_rng(0)
+    env = {"A": _dense(rng, 3, 3)}
+    rw, report = rewrite.rewrite_query(q, env)
+    assert rw is q and not report.changed
+    assert "no rewrite candidates" in report.render()
+
+
+# ---------------------------------------------------------------------------
+# Session surface: Database.explain and the rewrite toggle
+# ---------------------------------------------------------------------------
+
+
+def test_database_explain_reports_decisions():
+    db = repro.Database()
+    n = 6
+    for name in ("A", "B", "C"):
+        db.put(name, jnp.ones((n, n)), keys=("i", "j"))
+    text = db.explain(_chain3())
+    assert "before:" in text and "rewrite decisions:" in text
+    assert "FIRED" in text and "after:" in text
+    off = repro.Database(rewrite=False)
+    for name in ("A", "B", "C"):
+        off.put(name, jnp.ones((n, n)), keys=("i", "j"))
+    off_text = off.explain(_chain3())
+    assert "OFF" in off_text and "(unchanged)" in off_text
+
+
+def test_session_step_matches_oracle_with_rewrite_on():
+    q = _chain3()
+    env, _ = _chain3_env(n=6, seed=7)
+    oracle = ra_autodiff(q, opts=NO_FUSION)
+    loss_ref, g_ref = compiler.grad_eval(oracle, env, fuse_join_agg=False)
+
+    db = repro.Database()
+    for name in ("A", "B", "C"):
+        db.put(name, env[name].data, keys=("i", "j"))
+    loss, grads = db.query(q, wrt=("A", "B", "C")).step()
+    np.testing.assert_allclose(
+        np.asarray(loss.data), np.asarray(loss_ref.data), rtol=1e-4, atol=1e-5
+    )
+    for name in g_ref:
+        np.testing.assert_allclose(
+            np.asarray(grads[name].data), np.asarray(g_ref[name].data),
+            rtol=1e-4, atol=1e-5,
+        )

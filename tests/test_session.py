@@ -80,7 +80,12 @@ def test_catalog_stats_dense_and_coo():
     db = repro.Database()
     db.put("A", jnp.zeros((4, 6)), keys=("i", "j"))
     st = db.stats("A")
-    assert st == RelationStats(distinct=(4, 6), extents=(4, 6), nnz=24, density=1.0)
+    assert (st.distinct, st.extents, st.nnz, st.density) == (
+        (4, 6), (4, 6), 24, 1.0
+    )
+    # per-column equi-width histograms: a dense grid spreads uniformly
+    assert st.hist is not None and len(st.hist) == 2
+    assert sum(st.hist[0]) == 24 and sum(st.hist[1]) == 24
     # COO: distinct counted over live rows, padding excluded
     keys = jnp.asarray([[0, 1], [0, 1], [1, 1], [2, 1]], jnp.int32)
     coo = CooRelation(keys, jnp.ones((4,), jnp.float32), (8, 8))
@@ -418,10 +423,14 @@ def test_relational_ops_run_through_ambient_session():
     np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5)
 
 
-def test_front_door_shims_emit_deprecation_warnings():
-    """RAEngine / jit_execute / use_mesh / committed_layouts survive as
-    shims but warn; the internal session path stays silent."""
+def test_front_door_shims_are_gone():
+    """The deprecated pre-session shims (jit_execute / use_mesh /
+    committed_layouts) were removed one release after the session API
+    landed; RAEngine remains the warning-free library-level executor."""
     from repro.core import engine
+
+    for shim in ("jit_execute", "use_mesh", "committed_layouts"):
+        assert not hasattr(engine, shim), shim
 
     q = fra.Query(
         fra.Join(eq_pred(), jproj(), MATMUL, fra.scan("X", 0), fra.scan("W", 0)),
@@ -431,21 +440,14 @@ def test_front_door_shims_emit_deprecation_warnings():
         "X": DenseRelation(jnp.ones((2, 3)), 0),
         "W": DenseRelation(jnp.ones((3, 2)), 0),
     }
-    with pytest.warns(DeprecationWarning, match="repro.Database"):
-        eng = engine.RAEngine(q)
-    with pytest.warns(DeprecationWarning, match="repro.Database"):
-        out = engine.jit_execute(q, env)
-    assert out.data.shape == (2, 2)
-    with pytest.warns(DeprecationWarning, match="repro.Database"):
-        with engine.use_mesh(make_host_mesh()):
-            pass
-    with pytest.warns(DeprecationWarning, match="repro.Database"):
-        assert engine.committed_layouts(env) == {}
-    # the session-internal constructors/paths never warn
+    # direct construction and the session path are both warning-free now
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
+        eng = engine.RAEngine(q)
+        out = eng.lower(env).compile()(env)
         eng2 = engine.engine_for(q)
         repro.Database().execute(q, env)
+    assert out.data.shape == (2, 2)
     assert eng2.source is q
 
 

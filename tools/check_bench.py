@@ -31,15 +31,20 @@ from typing import Dict, List
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
 #: gated suites: fresh emission BENCH_<name>.json vs baselines/<name>.json
-SUITES = ("engine_overhead", "kernel_dispatch")
+SUITES = ("engine_overhead", "kernel_dispatch", "rjp_ablation")
 
 #: names considered CPU-stable: compiled/jitted steps only (the session
 #: variant is the same jitted step behind the Database front door, so
-#: gating it bounds the session's per-call overhead too).
+#: gating it bounds the session's per-call overhead too). The rjp lanes
+#: gate the §4 join-agg fusion win and the multi-join Σ-pushdown rewrite
+#: win; the interpreter-only rjp variants are excluded as unstable.
 STABLE = (
     re.compile(r"^engine_overhead/.*/compiled$"),
     re.compile(r"^engine_overhead/.*/session$"),
     re.compile(r"^kernel_dispatch/engine-"),
+    re.compile(r"^rjp/all-opts$"),
+    re.compile(r"^rjp/no-join-agg-fusion$"),
+    re.compile(r"^rjp/pushdown-"),
 )
 
 DEFAULT_THRESHOLD = 2.0
@@ -50,13 +55,47 @@ def _is_stable(name: str) -> bool:
 
 
 class BenchFormatError(ValueError):
-    """A benchmark emission/baseline row is missing a required key."""
+    """A benchmark emission/baseline file has an unusable shape — wrong
+    top-level type, non-object rows, missing or non-numeric metric keys.
+    Always names the offending file (and row), never a bare
+    KeyError/AttributeError."""
+
+
+def _rows(path: pathlib.Path, raw) -> List[dict]:
+    """Normalize the two accepted baseline schemas to a list of row
+    dicts: the emitted ``[{"name": ..., "us_per_call": ...}, ...]`` list,
+    or a hand-written ``{"<name>": <us>}`` / ``{"<name>": {...}}``
+    mapping. Anything else is a named format error — historically a
+    top-level list where a mapping was assumed crashed the gate with
+    ``AttributeError: 'list' object has no attribute 'keys'`` and no
+    file context."""
+    if isinstance(raw, list):
+        return raw
+    if isinstance(raw, dict):
+        return [
+            {"name": name, **val}
+            if isinstance(val, dict)
+            else {"name": name, "us_per_call": val}
+            for name, val in raw.items()
+        ]
+    raise BenchFormatError(
+        f"{path}: expected a list of benchmark rows or a name->timing "
+        f"mapping, got {type(raw).__name__}"
+    )
 
 
 def _load(path: pathlib.Path) -> Dict[str, float]:
-    rows = json.loads(path.read_text())
+    try:
+        raw = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        raise BenchFormatError(f"{path}: not valid JSON ({e})") from None
     out: Dict[str, float] = {}
-    for i, r in enumerate(rows):
+    for i, r in enumerate(_rows(path, raw)):
+        if not isinstance(r, dict):
+            raise BenchFormatError(
+                f"{path}: row {i} is {type(r).__name__}, expected an "
+                f"object with 'name'/'us_per_call' keys"
+            )
         missing = [k for k in ("name", "us_per_call") if k not in r]
         if missing:
             raise BenchFormatError(
@@ -64,7 +103,13 @@ def _load(path: pathlib.Path) -> Dict[str, float]:
                 f"missing metric key(s) {missing}; re-emit the suite or "
                 f"re-baseline (cp BENCH_<suite>.json benchmarks/baselines/)"
             )
-        out[r["name"]] = float(r["us_per_call"])
+        try:
+            out[r["name"]] = float(r["us_per_call"])
+        except (TypeError, ValueError):
+            raise BenchFormatError(
+                f"{path}: row {i} ({r['name']!r}) has non-numeric "
+                f"us_per_call {r['us_per_call']!r}"
+            ) from None
     return out
 
 
