@@ -18,9 +18,18 @@ keys+values shard bytes actually placed by the compiled in_shardings) —
 the sharded lane must show the ~N× reduction. Results are asserted to
 agree to atol 1e-5 across lanes.
 
+A third ``oocore`` lane extends the scaling axis past what fits at
+all: the same step through ``Database(memory_budget=...)`` with the
+budget set so E is 4× past the simulated device memory — the edge
+relation spills to the host chunk store and streams back through
+owner-partitioned chunk waves on the sharded mesh, matching the in-core
+lanes to atol 1e-5. ``tools/check_bench.py --suites coo_scale`` gates
+all three lanes against the committed baseline.
+
 Runs meaningfully under the tier1-spmd lane's
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on a single
-device both lanes degenerate to the same placement and the rows say so.
+device both mesh lanes degenerate to the same placement and the rows
+say so.
 """
 
 from __future__ import annotations
@@ -29,9 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core import fra
 from repro.core.autodiff import ra_autodiff
-from repro.core.engine import engine_for
+from repro.core.engine import StreamedCompiled, engine_for
 from repro.core.kernels import ADD, MUL, SQUARE, SUM_CHUNK, scale_kernel
 from repro.core.keys import EMPTY_KEY, TRUE, L, eq_pred, identity_key, jproj
 from repro.core.relation import DenseRelation
@@ -138,6 +148,36 @@ def run() -> None:
                 f"edge_bytes_per_device={ebytes};nnz_data_dim="
                 f"{placement['data']};E={e};n={n};d={d}",
             )
+
+        # oocore lane: E extended past the simulated device budget — the
+        # edge relation is 4x the headroom the budget leaves after the
+        # node features, so the same step must stream chunk waves
+        from repro.core.planner import _rel_bytes
+
+        edge_bytes = _rel_bytes(env["Edge"])
+        node_bytes = _rel_bytes(env["Node"])
+        budget = node_bytes + edge_bytes / 4
+        db = repro.Database(
+            mesh=lanes["sharded"], memory_budget=budget
+        )
+        db.put("Edge", env["Edge"])
+        db.put("Node", env["Node"].data, keys=("node",))
+        q = fra.Query(prog.forward.root, inputs=("Edge", "Node"))
+        h = db.query(q)
+        out, grads = h.step(wrt=("Edge", "Node"))
+        assert isinstance(h.last, StreamedCompiled), "budget did not stream"
+        leaves = [np.asarray(out.data)] + [
+            np.asarray(g.values if hasattr(g, "values") else g.data)
+            for _, g in sorted(grads.items())
+        ]
+        for got, want in zip(leaves, base):
+            np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-5)
+        us = timeit(lambda: h.step(wrt=("Edge", "Node")), iters=5, warmup=2)
+        record(
+            f"coo_scale/{name}/oocore", us,
+            f"waves={h.last.num_waves};budget={budget:.0f};"
+            f"edge_bytes={edge_bytes};E={e};n={n};d={d}",
+        )
 
 
 if __name__ == "__main__":

@@ -11,6 +11,9 @@
   coo_scale        COO nnz sharding: replicated vs nnz-sharded GCN grad
                    step, per-device edge-relation bytes (needs >=2
                    devices for the sharded lane to differ)
+  oocore_scale     out-of-core streaming: GCN grad step with the edge
+                   relation >=4x past the simulated device-memory
+                   budget, chunk waves vs the in-core oracle
 
 Each suite's rows are also written to BENCH_<suite>.json.
 
@@ -31,6 +34,7 @@ def main() -> None:
         kge,
         logreg,
         nnmf,
+        oocore_scale,
         rjp_ablation,
     )
 
@@ -43,6 +47,7 @@ def main() -> None:
         "engine_overhead": engine_overhead.run,
         "kernel_dispatch": kernel_dispatch.run,
         "coo_scale": coo_scale.run,
+        "oocore_scale": oocore_scale.run,
     }
     names = sys.argv[1:] or list(suites)
     unknown = [n for n in names if n not in suites]

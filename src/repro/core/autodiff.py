@@ -149,6 +149,9 @@ def _partial_bin(k: BinKernel, side: str) -> BinKernel:
             fn = lambda wrt, other, _k=k: _k.vjp_l(1.0, wrt, other)
         else:
             fn = lambda wrt, other, _k=k: _k.vjp_r(1.0, other, wrt)
+        # No einsum hints: ``elementwise`` promises product semantics to the
+        # compiler's einsum path, which a general ∂⊗/∂side does not have —
+        # the inner join lowers through the aligned/broadcast dense paths.
         _DERIVED[name] = register_bin(name, fn)
     return _DERIVED[name]
 
@@ -275,18 +278,52 @@ def _rjp_join_one_side(
         return fra.Restrict(out, fwd_ref(wrt_child))
 
     # General path (paper's unoptimized RJP_⋈): re-derive the forward join
-    # matches with the partial-derivative kernel, key ⟨keyL, keyO⟩, then join
-    # against the upstream gradient on keyO and contract with ×, then Σ.
-    inner_proj = JoinProj(
-        tuple(L(i) for i in range(wa)) + tuple(proj.comps)
-    )
+    # matches with the partial-derivative kernel, keyed ⟨keyL, keyO'⟩ where
+    # keyO' keeps only the output comps whose equivalence class is not
+    # already carried by keyL (a duplicated class would be an einsum output
+    # subscript repeated — unlowerable — and is redundant: the outer join
+    # reads the class off its keyL position instead). Then join the
+    # upstream gradient against ⟨keyL, keyO'⟩ on keyO and contract with ×,
+    # then Σ over the surviving other-side classes.
+    uf = join_equiv_classes(pred, wa, oa)
+    pos_of: Dict[object, int] = {}
+    for i in range(wa):
+        pos_of.setdefault(uf.find(L(i)), i)
+    extra: List = []
+    outer_eqs: List[Tuple] = []
+    for o, c in enumerate(proj.comps):
+        if isinstance(c, Lit):
+            # constant output comp: the upstream gradient contributes only
+            # where its key carries that constant
+            outer_eqs.append((L(o), Lit(c.val)))
+            continue
+        root = uf.find(c)
+        if root not in pos_of:
+            pos_of[root] = wa + len(extra)
+            extra.append(c)
+        outer_eqs.append((L(o), R(pos_of[root])))
+    inner_proj = JoinProj(tuple(L(i) for i in range(wa)) + tuple(extra))
     inner = fra.Join(
-        pred, inner_proj, _partial_bin(kernel, side), fwd_ref(wrt_child), fwd_ref(other_child)
+        pred, inner_proj, _partial_bin(kernel, side),
+        fwd_ref(wrt_child), fwd_ref(other_child),
     )
-    oa_out = proj.arity_out
-    outer_pred = JoinPred(tuple((L(o), R(wa + o)) for o in range(oa_out)))
+    # When the forward Σ drops a join key, some equivalence class of the
+    # inner join is determined by neither ⟨keyL⟩ nor ⟨keyO'⟩, so the inner
+    # join emits duplicate ⟨keyL, keyO'⟩ rows — a multiset no executor
+    # accepts as a relation. All duplicates of one ⟨keyL, keyO'⟩ meet the
+    # same g[keyO] in the outer join, so merging them with the Σ's ⊕ first
+    # is exact (distributivity of × over +) and makes the derivation both
+    # interpretable (Agg merges the pair list) and lowerable (the fused
+    # Agg-over-Join contracts the dropped class).
+    determined = set(pos_of)
+    for a, b in pred.eqs:
+        for c in (a, b):
+            if isinstance(c, Lit):
+                determined.add(uf.find(c))
+    if any(uf.find(R(j)) not in determined for j in range(oa)):
+        inner = fra.Agg(identity_key(wa + len(extra)), ADD, inner)
     outer_proj = JoinProj(tuple(R(i) for i in range(wa)))
-    outer = fra.Join(outer_pred, outer_proj, MUL, g, inner)
+    outer = fra.Join(JoinPred(tuple(outer_eqs)), outer_proj, MUL, g, inner)
     out = fra.Agg(identity_key(wa), ADD, outer)
     return fra.Restrict(out, fwd_ref(wrt_child))
 

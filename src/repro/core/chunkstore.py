@@ -1,0 +1,117 @@
+"""Host-resident chunked backing store for out-of-core execution.
+
+A ``ChunkStore`` holds relations that do not fit the session's device
+memory budget as **host numpy chunks** under a ``relation.ChunkManifest``
+(the "different tier" generalization of plan-aware rechunking: spilling
+to host is the same split/assemble all-to-all as re-blocking to another
+grid, with a transfer instead of a shuffle as its cost). The streaming
+executor (``core/engine.StreamedCompiled``) fetches one chunk *wave* at a
+time; ``fetch`` returns device arrays via ``jax.device_put``, which
+dispatches the host→device copy asynchronously — issuing the fetch of
+wave ``w+1`` before consuming wave ``w`` is what double-buffers the
+transfer behind compute.
+
+Counters (the session's spill counters, exposed as
+``Database.spill_stats`` / ``serving.BatchServer.spill_stats``):
+
+    spilled_relations — relations currently backed by the store
+    spilled_bytes     — host bytes across all stored chunks
+    fetched_chunks    — chunk fetches issued (host→device transfers)
+    fetched_bytes     — bytes moved host→device by those fetches
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .relation import (
+    ChunkManifest,
+    CooRelation,
+    DenseRelation,
+    make_manifest,
+    split_chunks,
+)
+
+
+class OutOfCoreError(RuntimeError):
+    """A memory-budgeted plan cannot be executed: the budget is too small
+    for the resident relations, or the query's shape cannot stream (the
+    reason names the offending node/relation)."""
+
+
+def _host_bytes(rel) -> int:
+    if isinstance(rel, DenseRelation):
+        return int(np.asarray(rel.data).nbytes)
+    return int(np.asarray(rel.keys).nbytes + np.asarray(rel.values).nbytes)
+
+
+class ChunkStore:
+    """Named host-resident chunked relations + spill/fetch counters."""
+
+    def __init__(self) -> None:
+        self._chunks: Dict[str, List] = {}
+        self._manifests: Dict[str, ChunkManifest] = {}
+        self.stats: Dict[str, int] = {
+            "spilled_relations": 0,
+            "spilled_bytes": 0,
+            "fetched_chunks": 0,
+            "fetched_bytes": 0,
+        }
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._chunks
+
+    def manifest(self, name: str) -> ChunkManifest:
+        return self._manifests[name]
+
+    def spill(self, name: str, rel, chunking, axis: int = 0) -> ChunkManifest:
+        """Split ``rel`` into host chunks. ``chunking`` is either a chunk
+        count (a fresh even manifest is built) or a ``ChunkManifest`` to
+        reuse — co-streamed relations share the stream's cut boundaries on
+        their own axis. Re-spilling a name under the same manifest is a
+        no-op; a different manifest replaces its chunks (the catalog's
+        ``put`` semantics)."""
+        if isinstance(chunking, ChunkManifest):
+            manifest = chunking
+        else:
+            manifest = make_manifest(rel, int(chunking), axis=axis)
+        if name in self._chunks and self._manifests[name] == manifest:
+            return manifest
+        chunks = split_chunks(rel, manifest)
+        if name in self._chunks:
+            self.drop(name)
+        self._chunks[name] = chunks
+        self._manifests[name] = manifest
+        self.stats["spilled_relations"] += 1
+        self.stats["spilled_bytes"] += sum(_host_bytes(c) for c in chunks)
+        return manifest
+
+    def fetch(self, name: str, w: int):
+        """Device-resident copy of chunk ``w`` (async host→device copy —
+        call ahead of use to overlap the transfer with compute)."""
+        chunk = self._chunks[name][w]
+        self.stats["fetched_chunks"] += 1
+        self.stats["fetched_bytes"] += _host_bytes(chunk)
+        if isinstance(chunk, DenseRelation):
+            return DenseRelation(jax.device_put(chunk.data), chunk.key_arity)
+        return CooRelation(
+            jax.device_put(chunk.keys),
+            jax.device_put(chunk.values),
+            chunk.extents,
+            chunk.owner_dim,
+            chunk.shard_offsets,
+        )
+
+    def host_chunk(self, name: str, w: int):
+        """The raw host chunk (no transfer, no counter)."""
+        return self._chunks[name][w]
+
+    def drop(self, name: str) -> None:
+        chunks = self._chunks.pop(name, None)
+        self._manifests.pop(name, None)
+        if chunks is not None:
+            self.stats["spilled_relations"] -= 1
+            self.stats["spilled_bytes"] -= sum(_host_bytes(c) for c in chunks)

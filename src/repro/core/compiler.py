@@ -351,6 +351,87 @@ def _aligned_join(
     return DenseRelation(val, key_arity=out_arity)
 
 
+def _broadcast_join(
+    join: fra.Join,
+    grp: Optional[KeyFn],
+    lrel: DenseRelation,
+    rrel: DenseRelation,
+) -> Optional[DenseRelation]:
+    """Last-resort dense ⋈ dense lowering for kernels with no einsum hints
+    and non-aligned projections (e.g. the autodiff general path's inner
+    join under a merging Σ): materialize the joint key-class grid,
+    broadcast both operands into it, apply the kernel pointwise, and sum
+    out the classes the (grp-composed) output key drops. Cost is the full
+    class-grid product — the paper's *unoptimized* RJP — so the einsum and
+    aligned paths are always tried first."""
+    la, ra = join.left.key_arity, join.right.key_arity
+    for a, b in join.pred.eqs:
+        if isinstance(a, Lit) or isinstance(b, Lit):
+            return None
+    uf = join_equiv_classes(join.pred, la, ra)
+
+    out_comps: List = list(join.proj.comps)
+    if grp is not None:
+        composed = []
+        for c in grp.comps:
+            if isinstance(c, Lit):
+                return None
+            composed.append(join.proj.comps[c.idx])
+        out_comps = composed
+    if any(isinstance(c, Lit) for c in out_comps):
+        return None
+
+    # one grid axis per join equivalence class, first-appearance order
+    ax_of: Dict[object, int] = {}
+    extents: List[int] = []
+    lcomps = tuple(L(i) for i in range(la))
+    rcomps = tuple(R(j) for j in range(ra))
+    for comps, rel in ((lcomps, lrel), (rcomps, rrel)):
+        for k, c in enumerate(comps):
+            root = uf.find(c)
+            if root not in ax_of:
+                ax_of[root] = len(extents)
+                extents.append(rel.extents[k])
+    out_ax: List[int] = []
+    for c in out_comps:
+        ax = ax_of[uf.find(c)]
+        if ax in out_ax:
+            return None          # repeated class in output key (diagonal)
+        out_ax.append(ax)
+    if grp is None and len(out_ax) != len(extents):
+        # a bare join dropping a class would emit duplicate keys
+        return None
+
+    def into_grid(rel: DenseRelation, comps) -> jnp.ndarray:
+        axes = [ax_of[uf.find(c)] for c in comps]
+        if len(set(axes)) != len(axes):
+            return None          # intra-side equality (diagonal operand)
+        perm = sorted(range(len(axes)), key=lambda i: axes[i])
+        data = jnp.transpose(
+            rel.data, tuple(perm) + tuple(range(len(axes), rel.data.ndim))
+        )
+        present = set(axes)
+        for ax in range(len(extents)):
+            if ax not in present:
+                data = jnp.expand_dims(data, axis=ax)
+        return jnp.broadcast_to(data, tuple(extents) + rel.chunk_shape)
+
+    lb = into_grid(lrel, lcomps)
+    rb = into_grid(rrel, rcomps)
+    if lb is None or rb is None:
+        return None
+    val = _vmapped(join.kernel.fn, len(extents))(lb, rb)
+    drop = tuple(ax for ax in range(len(extents)) if ax not in out_ax)
+    if drop:
+        val = jnp.sum(val, axis=drop)
+    remaining = [ax for ax in range(len(extents)) if ax not in drop]
+    perm = [remaining.index(ax) for ax in out_ax]
+    val = jnp.transpose(
+        val, tuple(perm) + tuple(range(len(out_ax), val.ndim))
+    )
+    return DenseRelation(val, key_arity=len(out_comps))
+
+
 # ---------------------------------------------------------------------------
 # Join lowering: gather path (one side COO)
 # ---------------------------------------------------------------------------
@@ -605,6 +686,9 @@ def _execute_graph(
             if grp is not None:
                 al = _agg_dense(grp, al)
             return al
+        bc = _broadcast_join(n, grp, lrel, rrel)
+        if bc is not None:
+            return bc
         raise LoweringError(f"cannot lower join {n.describe()}")
 
     def _agg_dense(grp: KeyFn, rel: DenseRelation) -> DenseRelation:

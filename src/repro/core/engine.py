@@ -52,6 +52,7 @@ from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import fra, kernels, planner
@@ -206,6 +207,7 @@ class Compiled:
         geometry: Optional[planner.MeshGeometry] = None,
         in_shardings: Optional[Tuple[Dict, Dict]] = None,
         pad_nnz: Optional[Dict[str, int]] = None,
+        rechunks: Optional[Dict[str, int]] = None,
     ):
         self.lowered = lowered
         self._jitted = jitted
@@ -224,14 +226,22 @@ class Compiled:
         #: (pad-and-mask): relation name → padded row count. __call__ pads
         #: inputs and slices nnz-shaped outputs back.
         self.pad_nnz = dict(pad_nnz or {})
+        #: the planner's *rechunk stage*: relations whose committed layout
+        #: differed from the plan's chosen grid at compile time, so the
+        #: re-blocking all-to-all was costed into the plan (name → bytes).
+        #: __call__ counts these moves under ``planned_bytes`` and does
+        #: not warn — only unplanned moves are "silent" reshards.
+        self.rechunks: Dict[str, int] = dict(rechunks or {})
         #: device-layout rechunk accounting for the silent-reshard path:
         #: calls, calls that moved committed bytes, cumulative and
-        #: last-call bytes moved by __call__'s device_put.
+        #: last-call bytes moved by __call__'s device_put; plus the
+        #: cumulative bytes of plan-aware (costed, warning-free) rechunks.
         self.reshard_stats: Dict[str, int] = {
             "calls": 0,
             "resharded_calls": 0,
             "bytes_moved": 0,
             "last_call_bytes": 0,
+            "planned_bytes": 0,
         }
         #: relations already warned about — ReshardWarning fires once per
         #: (cache entry, relation), not once per cache entry.
@@ -381,6 +391,14 @@ class Compiled:
             # fresh (uncommitted) arrays, which would hide a committed
             # input's layout mismatch from the stats.
             moved_by_rel = self._count_reshard_bytes(env)
+            # split plan-aware rechunks (costed at plan time, no warning)
+            # from silent reshards the planner did not anticipate
+            planned_by_rel = {
+                n: b for n, b in moved_by_rel.items() if n in self.rechunks
+            }
+            moved_by_rel = {
+                n: b for n, b in moved_by_rel.items() if n not in self.rechunks
+            }
             moved = sum(moved_by_rel.values())
         env = self._padded(env)
         donated = {k: env[k] for k in self.donate_names}
@@ -397,6 +415,7 @@ class Compiled:
             stats = self.reshard_stats
             stats["calls"] += 1
             stats["last_call_bytes"] = moved
+            stats["planned_bytes"] += sum(planned_by_rel.values())
             if moved:
                 stats["resharded_calls"] += 1
                 stats["bytes_moved"] += moved
@@ -592,6 +611,20 @@ class Lowered:
         )
         input_specs = planner.input_pspecs(fwd_query, plans)
 
+        # --- rechunk stage: relations whose committed layout is not the -
+        # plan's grid get an explicit, costed re-blocking (the all-to-all
+        # the bytes-moved model already charged via committed=): record
+        # them so __call__ books the move as planned, not silent
+        rechunks: Dict[str, int] = {}
+        if committed and mesh is not None:
+            for name, spec in committed.items():
+                planned = input_specs.get(name)
+                if _norm_spec(spec) != _norm_spec(planned):
+                    rel = self.abstract_env.get(name)
+                    rechunks[name] = (
+                        int(planner._rel_bytes(rel)) if rel is not None else 0
+                    )
+
         # --- jit: plans become in_shardings, XLA inserts the collectives -
         engine = self.engine
         table = self.dispatch
@@ -647,6 +680,7 @@ class Lowered:
             geo,
             shardings,
             pad_nnz,
+            rechunks,
         )
         self._compiled[key] = compiled
         while len(self._compiled) > _MAX_COMPILED:
@@ -768,6 +802,188 @@ class Lowered:
                         stacklevel=3,
                     )
         return DenseRelation(NamedSharding(mesh, P(*full)), rel.key_arity), None
+
+
+# ---------------------------------------------------------------------------
+# StreamedCompiled: out-of-core chunk-wave execution
+# ---------------------------------------------------------------------------
+
+
+class StreamedCompiled:
+    """Chunk-wave executor for a ``planner.WavePlan``: the session's
+    memory budget did not fit the environment, so the streamed relation
+    (and its co-streams) live host-side in the ``ChunkStore`` and each
+    call runs the normally-compiled step once per wave over ``resident +
+    one chunk``, double-buffering the host→device transfer of wave
+    ``w+1`` behind wave ``w``'s compute.
+
+    Wave results merge by the plan's soundness analysis
+    (``planner._stream_states``): an output leaf whose shape equals the
+    full in-core lowering's expectation is an additive partial (Σ across
+    waves — the loss, gradients of resident relations); a leaf whose
+    shape differs along exactly one axis is wave-local rows of the
+    streamed axis (gradients of the streamed relation itself) and is
+    sliced to the wave's live rows — dropping the COO pad rows of the
+    padded last chunk — and concatenated in row order. Either way the
+    merged result equals the in-core step's.
+
+    Duck-types ``Compiled`` for the session's introspection surface
+    (``mesh``/``plans``/``placements``/``resolutions``/``reshard_stats``/
+    ``planned_spec``) by delegating to the per-wave inner ``Compiled``
+    (identical across waves of equal signature); ``planned_spec`` is None
+    for streamed relations — they have no single device placement, so
+    the catalog never commits a layout for them."""
+
+    def __init__(self, plan, store, compile_wave, lower_full):
+        from .chunkstore import OutOfCoreError  # noqa: F401  (re-raised)
+
+        self.plan = plan
+        self.store = store
+        #: wave env → Compiled (the session's normal staged path; the
+        #: engine's Lowered/Compiled caches make wave 2..n cache hits).
+        self._compile_wave = compile_wave
+        #: full env → Lowered (abstract shapes only — never executed):
+        #: its out_shape is the merge oracle for ADD-vs-CONCAT leaves.
+        self._lower_full = lower_full
+        self._inner: Optional[Compiled] = None
+
+    # -- Compiled surface ---------------------------------------------------
+
+    @property
+    def num_waves(self) -> int:
+        return self.plan.num_waves
+
+    @property
+    def mesh(self):
+        return self._inner.mesh if self._inner is not None else None
+
+    @property
+    def plans(self):
+        return self._inner.plans if self._inner is not None else {}
+
+    @property
+    def placements(self):
+        return self._inner.placements if self._inner is not None else {}
+
+    @property
+    def resolutions(self):
+        return self._inner.resolutions if self._inner is not None else {}
+
+    @property
+    def reshard_stats(self) -> Dict[str, int]:
+        if self._inner is None:
+            return {
+                "calls": 0, "resharded_calls": 0, "bytes_moved": 0,
+                "last_call_bytes": 0, "planned_bytes": 0,
+            }
+        return self._inner.reshard_stats
+
+    def planned_spec(self, name: str):
+        if name in self.plan.streamed_names or self._inner is None:
+            return None
+        return self._inner.planned_spec(name)
+
+    # -- execution ----------------------------------------------------------
+
+    def _fetch_wave(self, resident: Env, w: int, max_rows: int) -> Env:
+        """Resident relations + wave ``w``'s chunks, device-put issued
+        (async) — calling this one wave ahead is the double buffer."""
+        wave = dict(resident)
+        for name in self.plan.streamed_names:
+            rel = self.store.fetch(name, w)
+            if isinstance(rel, CooRelation):
+                # pad every COO wave to the largest chunk so all waves
+                # share one env signature (one lowering, one executable);
+                # pad rows carry COO_PAD_KEY and are sliced off on merge
+                rel = pad_coo_nnz(rel, max_rows)
+            wave[name] = rel
+        return wave
+
+    def _merge(self, wave_outs, want_shape):
+        from .chunkstore import OutOfCoreError
+
+        want_leaves, want_def = jax.tree_util.tree_flatten(want_shape)
+        per_wave = [jax.tree_util.tree_leaves(o) for o in wave_outs]
+        if any(len(p) != len(want_leaves) for p in per_wave):
+            raise OutOfCoreError(
+                "wave output structure does not match the in-core lowering"
+            )
+        bnd = self.plan.boundaries
+        merged = []
+        for i, want in enumerate(want_leaves):
+            leaves = [p[i] for p in per_wave]
+            wshape = tuple(want.shape)
+            if all(tuple(g.shape) == wshape for g in leaves):
+                out = leaves[0]
+                for g in leaves[1:]:
+                    out = out + g
+                merged.append(out)
+                continue
+            shapes = {tuple(g.shape) for g in leaves}
+            diff_axes = {
+                ax
+                for s in shapes
+                if len(s) == len(wshape)
+                for ax in range(len(s))
+                if s[ax] != wshape[ax]
+            }
+            if len(diff_axes) != 1 or any(
+                len(s) != len(wshape) for s in shapes
+            ):
+                raise OutOfCoreError(
+                    f"cannot merge wave output leaf of shapes {shapes} "
+                    f"into expected {wshape}: not an additive partial and "
+                    "not single-axis wave rows"
+                )
+            ax = diff_axes.pop()
+            cut = []
+            for w, g in enumerate(leaves):
+                rows = bnd[w + 1] - bnd[w]
+                idx = [slice(None)] * g.ndim
+                idx[ax] = slice(0, rows)  # drop COO pad rows of the wave
+                # host-side assembly: the full-size streamed-axis result
+                # is host-tier data by definition (it did not fit the
+                # device budget), and np.asarray also canonicalizes
+                # mesh-sharded wave leaves before the concat
+                cut.append(np.asarray(jax.device_get(g[tuple(idx)])))
+            merged.append(np.concatenate(cut, axis=ax))
+        return jax.tree_util.tree_unflatten(want_def, merged)
+
+    def __call__(self, env: Env, seed: Optional[AnyRel] = None):
+        from .relation import ChunkManifest
+
+        plan = self.plan
+        streamed = set(plan.streamed_names)
+        axis_of = dict(plan.axis_of)
+        smani = ChunkManifest(
+            axis=0,
+            boundaries=plan.boundaries,
+            owner_aligned=plan.owner_aligned,
+        )
+        self.store.spill(plan.stream, env[plan.stream], smani)
+        for name in plan.co_streams:
+            # co-streams share the stream's cut vector on their own axis:
+            # wave w of the stream joins wave w of every co-stream
+            self.store.spill(
+                name,
+                env[name],
+                ChunkManifest(axis=axis_of[name], boundaries=plan.boundaries),
+            )
+        resident = {k: v for k, v in env.items() if k not in streamed}
+        max_rows = smani.max_rows
+        want_shape = self._lower_full(env, seed).out_shape
+
+        outs = []
+        wave = self._fetch_wave(resident, 0, max_rows)
+        for w in range(plan.num_waves):
+            if w + 1 < plan.num_waves:
+                nxt = self._fetch_wave(resident, w + 1, max_rows)
+            compiled = self._compile_wave(wave, seed)
+            self._inner = compiled
+            outs.append(compiled(wave, seed))
+            if w + 1 < plan.num_waves:
+                wave = nxt
+        return self._merge(outs, want_shape)
 
 
 # ---------------------------------------------------------------------------

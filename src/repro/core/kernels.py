@@ -42,6 +42,13 @@ class UnaryKernel:
     name: str
     fn: Callable
     vjp: Callable  # vjp(g, x)
+    # Streamability hints for out-of-core wave planning (core/planner.py):
+    #   linear           — ⊙(a + b) = ⊙(a) + ⊙(b); safe after a Σ that has
+    #                      only been partially accumulated across waves
+    #   zero_preserving  — ⊙(0) = 0; safe on a segment grid whose untouched
+    #                      segments are still the Σ unit (owner-aligned waves)
+    linear: bool = False
+    zero_preserving: bool = False
 
     def __repr__(self) -> str:
         return f"⊙{self.name}"
@@ -87,14 +94,20 @@ _BIN: Dict[str, BinKernel] = {}
 _AGG: Dict[str, AggKernel] = {}
 
 
-def register_unary(name: str, fn: Callable, vjp: Optional[Callable] = None) -> UnaryKernel:
+def register_unary(
+    name: str,
+    fn: Callable,
+    vjp: Optional[Callable] = None,
+    linear: bool = False,
+    zero_preserving: bool = False,
+) -> UnaryKernel:
     if vjp is None:
         # Appendix A: chunk-kernel derivatives via conventional auto-diff.
         def vjp(g, x, _fn=fn):
             _, pull = jax.vjp(_fn, x)
             return pull(g)[0]
 
-    k = UnaryKernel(name, fn, vjp)
+    k = UnaryKernel(name, fn, vjp, linear, zero_preserving)
     _UNARY[name] = k
     return k
 
@@ -203,22 +216,32 @@ SQERR = register_bin(
 )
 
 # -- unary ⊙ ----------------------------------------------------------------
-IDENT = register_unary("ident", lambda x: x, vjp=lambda g, x: g)
-NEG = register_unary("neg", lambda x: -x, vjp=lambda g, x: -g)
+IDENT = register_unary(
+    "ident", lambda x: x, vjp=lambda g, x: g, linear=True, zero_preserving=True
+)
+NEG = register_unary(
+    "neg", lambda x: -x, vjp=lambda g, x: -g, linear=True, zero_preserving=True
+)
 LOGISTIC = register_unary(
     "logistic",
     jax.nn.sigmoid,
     vjp=lambda g, x: g * jax.nn.sigmoid(x) * (1.0 - jax.nn.sigmoid(x)),
 )
-RELU = register_unary("relu", jax.nn.relu, vjp=lambda g, x: g * (x > 0))
+RELU = register_unary(
+    "relu", jax.nn.relu, vjp=lambda g, x: g * (x > 0), zero_preserving=True
+)
 EXP = register_unary("exp", jnp.exp, vjp=lambda g, x: g * jnp.exp(x))
-SQUARE = register_unary("square", lambda x: x * x, vjp=lambda g, x: 2.0 * g * x)
+SQUARE = register_unary(
+    "square", lambda x: x * x, vjp=lambda g, x: 2.0 * g * x, zero_preserving=True
+)
 # Reduce a chunk to a scalar value (chunked losses). Chunk-local semantics:
 # executors vmap kernels over block-key axes, so jnp.sum sees one chunk.
 SUM_CHUNK = register_unary(
     "sum_chunk",
     lambda x: jnp.sum(x),
     vjp=lambda g, x: g * jnp.ones_like(x),
+    linear=True,
+    zero_preserving=True,
 )
 SCALE = {}
 
@@ -228,7 +251,11 @@ def scale_kernel(c: float) -> UnaryKernel:
     key = float(c)
     if key not in SCALE:
         SCALE[key] = register_unary(
-            f"scale[{key}]", lambda x, _c=key: _c * x, vjp=lambda g, x, _c=key: _c * g
+            f"scale[{key}]",
+            lambda x, _c=key: _c * x,
+            vjp=lambda g, x, _c=key: _c * g,
+            linear=True,
+            zero_preserving=True,
         )
     return SCALE[key]
 

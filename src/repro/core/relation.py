@@ -272,6 +272,146 @@ def measure_stats(rel):
     raise TypeError(f"measure_stats: not a relation: {type(rel)}")
 
 
+# ---------------------------------------------------------------------------
+# Chunk manifests: the host-resident blocked layout for out-of-core waves
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChunkManifest:
+    """Row-blocking of one relation for out-of-core execution.
+
+    ``axis`` is the blocked dimension — a key dim for a DenseRelation, and
+    always the physical nnz row axis for a CooRelation. ``boundaries`` is
+    the monotone cut vector (num_chunks+1 entries, first 0, last the row
+    count), so chunk ``w`` is rows ``[boundaries[w], boundaries[w+1])``.
+    ``owner_aligned`` records that COO cuts were snapped to owner-run
+    starts (see ``make_manifest``): no Σ segment then straddles a wave, so
+    each wave's partial segment grid is exact where touched and the
+    ⊕-unit elsewhere — what lets zero-preserving kernels stream."""
+
+    axis: int
+    boundaries: Tuple[int, ...]
+    owner_aligned: bool = False
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.boundaries) - 1
+
+    def chunk_rows(self, w: int) -> int:
+        return self.boundaries[w + 1] - self.boundaries[w]
+
+    @property
+    def max_rows(self) -> int:
+        return max(
+            self.boundaries[w + 1] - self.boundaries[w]
+            for w in range(self.num_chunks)
+        )
+
+
+def make_manifest(rel, num_chunks: int, axis: int = 0) -> ChunkManifest:
+    """Block ``rel`` into ``num_chunks`` row ranges.
+
+    Dense relations split a key dim evenly (remainder spread over the
+    leading chunks). COO relations split the nnz axis; when the relation
+    is owner-partitioned, tentative even cuts are snapped *down* to the
+    start of the owner run they fall into, so one Σ segment is never split
+    across two waves (duplicate cuts collapse — heavy owners can reduce
+    the chunk count)."""
+    if num_chunks < 1:
+        raise ValueError(f"make_manifest: num_chunks={num_chunks} must be >= 1")
+    if isinstance(rel, DenseRelation):
+        if not 0 <= axis < rel.key_arity:
+            raise ValueError(
+                f"make_manifest: axis {axis} out of range for key arity "
+                f"{rel.key_arity}"
+            )
+        rows = int(rel.extents[axis])
+    elif isinstance(rel, CooRelation):
+        axis = 0
+        rows = rel.nnz
+    else:
+        raise TypeError(f"make_manifest: not a relation: {type(rel)}")
+    if num_chunks > max(rows, 1):
+        raise ValueError(
+            f"make_manifest: {num_chunks} chunks over {rows} rows"
+        )
+    base, rem = divmod(rows, num_chunks)
+    cuts = [0]
+    for w in range(num_chunks):
+        cuts.append(cuts[-1] + base + (1 if w < rem else 0))
+    owner_aligned = False
+    if isinstance(rel, CooRelation) and rel.owner_dim is not None and rows:
+        owners = np.asarray(rel.keys)[:, rel.owner_dim]
+        # first row of each contiguous owner run; in the owner-sorted live
+        # region runs ARE owner groups, and the trailing COO_PAD_KEY pad
+        # rows form one final run of their own (splitting pads is harmless)
+        starts = np.flatnonzero(np.r_[True, owners[1:] != owners[:-1]])
+        snapped = [0]
+        for t in cuts[1:-1]:
+            s = int(starts[np.searchsorted(starts, t, side="right") - 1])
+            if s > snapped[-1]:
+                snapped.append(s)
+        snapped.append(rows)
+        cuts = snapped
+        owner_aligned = True
+    return ChunkManifest(axis, tuple(cuts), owner_aligned)
+
+
+def split_chunks(rel, manifest: ChunkManifest):
+    """Materialize the manifest's chunks as host-resident relations
+    (numpy payloads — this is the spill step, not a traced one)."""
+    out = []
+    for w in range(manifest.num_chunks):
+        lo, hi = manifest.boundaries[w], manifest.boundaries[w + 1]
+        if isinstance(rel, DenseRelation):
+            data = np.asarray(rel.data)
+            sl = [slice(None)] * data.ndim
+            sl[manifest.axis] = slice(lo, hi)
+            out.append(DenseRelation(data[tuple(sl)], rel.key_arity))
+        else:
+            out.append(
+                CooRelation(
+                    np.asarray(rel.keys)[lo:hi],
+                    np.asarray(rel.values)[lo:hi],
+                    rel.extents,
+                    rel.owner_dim,
+                    None,
+                )
+            )
+    return out
+
+
+def assemble_chunks(chunks, manifest: ChunkManifest):
+    """Inverse of ``split_chunks``: reassemble one relation."""
+    if not chunks:
+        raise ValueError("assemble_chunks: no chunks")
+    first = chunks[0]
+    if isinstance(first, DenseRelation):
+        data = np.concatenate(
+            [np.asarray(c.data) for c in chunks], axis=manifest.axis
+        )
+        return DenseRelation(data, first.key_arity)
+    keys = np.concatenate([np.asarray(c.keys) for c in chunks], axis=0)
+    values = np.concatenate([np.asarray(c.values) for c in chunks], axis=0)
+    return CooRelation(keys, values, first.extents, first.owner_dim, None)
+
+
+def rechunk(chunks, old: ChunkManifest, new: ChunkManifest):
+    """Re-block a chunked relation from manifest ``old`` to ``new`` —
+    the same all-to-all ``split ∘ assemble`` whether the target is a
+    different grid or a different tier. Round-tripping A→B→A is
+    bit-stable (pure row movement, no arithmetic)."""
+    if old.boundaries[-1] != new.boundaries[-1]:
+        raise ValueError(
+            f"rechunk: row counts differ ({old.boundaries[-1]} vs "
+            f"{new.boundaries[-1]})"
+        )
+    if old.axis != new.axis:
+        raise ValueError(f"rechunk: axes differ ({old.axis} vs {new.axis})")
+    return split_chunks(assemble_chunks(chunks, old), new)
+
+
 def owner_partition(
     rel: CooRelation, num_shards: int, dim: int = -1
 ) -> CooRelation:

@@ -49,7 +49,9 @@ from typing import Any, Callable, Dict, Iterator, Optional, Sequence, Tuple, Uni
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from . import chunkstore as _chunkstore
 from . import engine as _engine
 from . import fra, kernels, planner
 from . import rewrite as _rewrite
@@ -225,6 +227,7 @@ class Database:
         *,
         dispatch=None,
         mem_budget: Optional[float] = None,
+        memory_budget: Optional[float] = None,
         fuse_join_agg: bool = True,
         rewrite=True,
         max_cache_entries: Optional[int] = None,
@@ -239,6 +242,15 @@ class Database:
         self.mem_budget = (
             planner.DEFAULT_MEM_BUDGET if mem_budget is None else mem_budget
         )
+        #: out-of-core *device-memory* budget in bytes (distinct from
+        #: ``mem_budget``, the planner's per-device plan-feasibility
+        #: budget): when a step's environment exceeds it, the largest
+        #: base relation is spilled to the host-resident ChunkStore and
+        #: streamed through the step in chunk waves. None (default)
+        #: disables spilling entirely — plans and results are
+        #: bit-identical to an unbudgeted session.
+        self.memory_budget = memory_budget
+        self._chunkstore = _chunkstore.ChunkStore()
         self.fuse_join_agg = fuse_join_agg
         self.max_cache_entries = max_cache_entries
         self._exec_cache: "OrderedDict[Any, Any]" = OrderedDict()
@@ -279,6 +291,24 @@ class Database:
             else:
                 arity = arr.ndim
             value = DenseRelation(arr, arity)
+        if (
+            self.memory_budget is not None
+            and planner._rel_bytes(value) > self.memory_budget
+        ):
+            # host tier: a relation bigger than the device budget is kept
+            # as host numpy — statistics, signatures and abstract lowering
+            # all work on numpy payloads, and the wave executor splits
+            # host-side anyway, so nothing forces it onto the device
+            if isinstance(value, DenseRelation):
+                value = DenseRelation(np.asarray(value.data), value.key_arity)
+            else:
+                value = CooRelation(
+                    np.asarray(value.keys),
+                    np.asarray(value.values),
+                    value.extents,
+                    value.owner_dim,
+                    value.shard_offsets,
+                )
         self.catalog.put(name, value, keys, refresh_stats=refresh_stats)
         return self
 
@@ -311,6 +341,15 @@ class Database:
         """The PartitionSpec the last compiled plan committed the
         relation to (None before any mesh-compiled step)."""
         return self.catalog.entry(name).layout
+
+    @property
+    def spill_stats(self) -> Dict[str, int]:
+        """Out-of-core spill counters of the session's ChunkStore:
+        ``spilled_relations`` / ``spilled_bytes`` currently host-resident,
+        ``fetched_chunks`` / ``fetched_bytes`` moved host→device by chunk
+        waves. All zero while ``memory_budget`` is unset or everything
+        fits in core."""
+        return dict(self._chunkstore.stats)
 
     # -- the active mesh ---------------------------------------------------
 
@@ -436,6 +475,44 @@ class Database:
         stats: Optional[Dict[str, planner.RelationStats]] = None,
     ):
         eng = _engine.engine_for(program, fuse_join_agg=self.fuse_join_agg)
+        if self.memory_budget is not None:
+            fwd = eng.forward_query
+            wave_plan = planner.plan_waves(fwd, env, self.memory_budget)
+            if wave_plan is not None:
+                if donate:
+                    raise _chunkstore.OutOfCoreError(
+                        f"cannot donate {sorted(donate)} while streaming "
+                        "chunk waves: the buffers are reused across waves"
+                    )
+
+                def compile_wave(wave_env, wave_seed):
+                    wstats = self._catalog_stats_for(wave_env)
+                    wlow = eng.lower(
+                        wave_env,
+                        wave_seed,
+                        dispatch=self.dispatch,
+                        stats=wstats,
+                        rewrite=self.rewrite_rules,
+                    )
+                    return wlow.compile_auto(
+                        wave_env,
+                        mesh=self._step_mesh(),
+                        stats=wstats,
+                        mem_budget=self.mem_budget,
+                    )
+
+                def lower_full(full_env, full_seed):
+                    return eng.lower(
+                        full_env,
+                        full_seed,
+                        dispatch=self.dispatch,
+                        stats=stats,
+                        rewrite=self.rewrite_rules,
+                    )
+
+                return _engine.StreamedCompiled(
+                    wave_plan, self._chunkstore, compile_wave, lower_full
+                )
         low = eng.lower(
             env,
             seed,

@@ -212,6 +212,13 @@ class BatchServer:
         """The session cache's hit/miss/eviction counters."""
         return self.db.cache_stats
 
+    @property
+    def spill_stats(self) -> Dict[str, int]:
+        """The session's out-of-core spill counters (all zero unless the
+        session was built with ``memory_budget=`` and a step exceeded
+        it)."""
+        return self.db.spill_stats
+
     def bucket_for(self, batch: int, seq: int) -> Tuple[int, int]:
         """The smallest configured (batch, seq) bucket that fits the
         request — batch rounds up, the sequence length must match a

@@ -227,3 +227,164 @@ def test_fanout_total_derivative_add():
     prog = ra_autodiff(q)
     out, grads = prog.eval(env)
     np.testing.assert_allclose(rel_to_dense(grads["X"], (4,)), 2 * x, rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# General partial-RJP fallback (the unoptimized RJP_join) on chains whose
+# Σ drops the join key: these derivations used to produce bare joins with
+# duplicate keys that neither interpreted nor lowered, and were only
+# reachable by disabling the Σ-pushdown rewrite. They now run end to end
+# through both the interpreter and the compiled engine.
+# ---------------------------------------------------------------------------
+
+
+def _run_both_ways(q, arrays, wrt):
+    """(interpreter grads, compiled grads) for a scalar-loss query over
+    dense env arrays."""
+    from repro.core.engine import engine_for
+    from repro.core.relation import DenseRelation
+
+    prog = ra_autodiff(q)
+    ienv = {k: dense_to_rel(v) for k, v in arrays.items()}
+    _, igrads = prog.eval(ienv)
+    cenv = {
+        k: DenseRelation(jnp.asarray(v), np.asarray(v).ndim)
+        for k, v in arrays.items()
+    }
+    eng = engine_for(prog)
+    _, cgrads = eng.lower(cenv).compile()(cenv)
+    return (
+        {n: rel_to_dense(igrads[n], arrays[n].shape) for n in wrt},
+        {n: np.asarray(cgrads[n].data) for n in wrt},
+    )
+
+
+def test_general_partial_rjp_sqerr_sigma_drops_join_key():
+    # loss = Σ_{i,j,k} sqerr(R[i,j], S[j,k]): ∂⊗/∂side is non-multiplicative,
+    # so RJP_join takes the general fallback; the Σ above the join drops
+    # the join key j (and k), the regression this path used to fail on.
+    rng = np.random.default_rng(11)
+    Rm = rng.normal(size=(3, 4))
+    Sm = rng.normal(size=(4, 2))
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), SQERR,
+        fra.scan("R", 2), fra.scan("S", 2),
+    )
+    per_i = fra.Agg(project_key(0), ADD, join)
+    q = fra.Query(fra.Agg(EMPTY_KEY, ADD, per_i), inputs=("R", "S"))
+
+    def loss(Ra, Sa):
+        return jnp.sum(0.5 * (Ra[:, :, None] - Sa[None, :, :]) ** 2)
+
+    dR, dS = jax.grad(loss, argnums=(0, 1))(jnp.asarray(Rm), jnp.asarray(Sm))
+    igrads, cgrads = _run_both_ways(q, {"R": Rm, "S": Sm}, ("R", "S"))
+    for got in (igrads, cgrads):
+        np.testing.assert_allclose(got["R"], np.asarray(dR), atol=1e-8)
+        np.testing.assert_allclose(got["S"], np.asarray(dS), atol=1e-8)
+
+
+def test_general_partial_rjp_without_fusion_or_rewrites():
+    # NO_OPTS: every §4 optimization off, so even × takes the general
+    # path. The join keeps all key classes (i, j, k) — a valid relation
+    # without fusion — and the Σ drops j and k.
+    from repro.core.autodiff import NO_OPTS
+
+    rng = np.random.default_rng(12)
+    A = rng.normal(size=(3, 4))
+    B = rng.normal(size=(4, 2))
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(EMPTY_KEY, ADD, join), inputs=("A", "B"))
+    prog = ra_autodiff(q, opts=NO_OPTS)
+
+    ienv = {"A": dense_to_rel(A), "B": dense_to_rel(B)}
+    _, igrads = prog.eval(ienv)
+    np.testing.assert_allclose(
+        rel_to_dense(igrads["A"], A.shape),
+        B.sum(1)[None, :].repeat(3, 0),
+        atol=1e-8,
+    )
+    np.testing.assert_allclose(
+        rel_to_dense(igrads["B"], B.shape),
+        A.sum(0)[:, None].repeat(2, 1),
+        atol=1e-8,
+    )
+
+    from repro.core.engine import engine_for
+    from repro.core.relation import DenseRelation
+
+    cenv = {
+        "A": DenseRelation(jnp.asarray(A), 2),
+        "B": DenseRelation(jnp.asarray(B), 2),
+    }
+    # NO_OPTS grads consume the raw join intermediates, so the forward
+    # must materialize them (the rjp_ablation contract).
+    eng = engine_for(prog, fuse_join_agg=False)
+    _, cgrads = eng.lower(cenv).compile()(cenv)
+    np.testing.assert_allclose(
+        np.asarray(cgrads["A"].data), B.sum(1)[None, :].repeat(3, 0), atol=1e-8
+    )
+    np.testing.assert_allclose(
+        np.asarray(cgrads["B"].data), A.sum(0)[:, None].repeat(2, 1), atol=1e-8
+    )
+
+
+def test_general_partial_rjp_coo_join():
+    # COO edge relation ⋈ dense nodes under a non-multiplicative ⊗:
+    # the fallback derivation must produce the sparse edge gradient and
+    # the scatter-added dense node gradient.
+    from repro.core.engine import engine_for
+    from repro.core.relation import CooRelation, DenseRelation
+
+    rng = np.random.default_rng(13)
+    n, e = 5, 12
+    flat = rng.choice(n * n, size=e, replace=False)
+    keys = np.stack([flat // n, flat % n], 1)
+    w = rng.normal(size=e)
+    x = rng.normal(size=n)
+    join = fra.Join(
+        eq_pred((0, 0)), jproj(L(1)), SQERR,
+        fra.scan("Edge", 2), fra.scan("Node", 1),
+    )
+    per_dst = fra.Agg(identity_key(1), ADD, join)
+    q = fra.Query(fra.Agg(EMPTY_KEY, ADD, per_dst), inputs=("Edge", "Node"))
+    prog = ra_autodiff(q)
+
+    # oracle: loss = Σ_e 0.5(w_e − x[src_e])²
+    want_edge = w - x[keys[:, 0]]
+    want_node = np.zeros(n)
+    np.add.at(want_node, keys[:, 0], x[keys[:, 0]] - w)
+
+    ienv = {
+        "Edge": {(int(s), int(d)): float(v) for (s, d), v in zip(keys, w)},
+        "Node": dense_to_rel(x),
+    }
+    _, igrads = prog.eval(ienv)
+    for (src, dst), want in zip(keys, want_edge):
+        np.testing.assert_allclose(
+            igrads["Edge"][(int(src), int(dst))], want, atol=1e-8
+        )
+    np.testing.assert_allclose(
+        rel_to_dense(igrads["Node"], x.shape), want_node, atol=1e-8
+    )
+
+    cenv = {
+        "Edge": CooRelation(
+            jnp.asarray(keys, jnp.int32), jnp.asarray(w), (n, n)
+        ),
+        "Node": DenseRelation(jnp.asarray(x), 1),
+    }
+    eng = engine_for(prog)
+    _, cgrads = eng.lower(cenv).compile()(cenv)
+    assert isinstance(cgrads["Edge"], CooRelation)
+    np.testing.assert_array_equal(
+        np.asarray(cgrads["Edge"].keys), keys
+    )
+    np.testing.assert_allclose(
+        np.asarray(cgrads["Edge"].values), want_edge, atol=1e-8
+    )
+    np.testing.assert_allclose(
+        np.asarray(cgrads["Node"].data), want_node, atol=1e-8
+    )

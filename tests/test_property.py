@@ -257,3 +257,130 @@ def test_pallas_matmul_random_shapes(mi, ki, ni, dtype, seed):
         rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
         atol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
     )
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core chunking invariants (rechunk / wave order / pad-and-mask)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def _chunked_relation(draw):
+    """A random dense or owner-partitioned COO relation plus two valid
+    chunk counts for its leading axis."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    if draw(st.booleans()):
+        rows = draw(st.integers(4, 40))
+        width = draw(st.integers(1, 5))
+        rel = DenseRelation(
+            jnp.asarray(rng.normal(size=(rows, width)), jnp.float32), 1
+        )
+    else:
+        from repro.core.relation import CooRelation, owner_partition
+
+        n = draw(st.integers(3, 10))
+        nnz = draw(st.integers(4, 60))
+        keys = np.stack(
+            [rng.integers(0, n, nnz), rng.integers(0, n, nnz)], 1
+        )
+        vals = rng.normal(size=nnz).astype(np.float32)
+        rel = owner_partition(
+            CooRelation(
+                jnp.asarray(keys, jnp.int32), jnp.asarray(vals), (n, n)
+            ),
+            num_shards=draw(st.integers(1, 3)),
+            dim=1,
+        )
+        rows = int(rel.nnz)
+    a = draw(st.integers(1, max(1, rows // 2)))
+    b = draw(st.integers(1, max(1, rows // 2)))
+    return rel, a, b
+
+
+@settings(max_examples=40, deadline=None)
+@given(_chunked_relation())
+def test_rechunk_round_trip_is_bit_stable(case):
+    """rechunk A→B→A reproduces the original chunks bit for bit (and
+    assemble ∘ split is the identity on the relation)."""
+    from repro.core.relation import (
+        assemble_chunks, make_manifest, rechunk, split_chunks,
+    )
+
+    rel, a, b = case
+    ma = make_manifest(rel, a)
+    mb = make_manifest(rel, b)
+    ca = split_chunks(rel, ma)
+    cb = rechunk(ca, ma, mb)
+    ca2 = rechunk(cb, mb, ma)
+    for x, y in zip(ca, ca2):
+        for lx, ly in zip(jax.tree_util.tree_leaves(x),
+                          jax.tree_util.tree_leaves(y)):
+            np.testing.assert_array_equal(np.asarray(lx), np.asarray(ly))
+    back = assemble_chunks(ca2, ma)
+    for lx, ly in zip(jax.tree_util.tree_leaves(rel),
+                      jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(lx), np.asarray(ly))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(4, 48),
+    st.integers(1, 4),
+    st.integers(2, 6),
+    st.integers(0, 2**31 - 1),
+)
+def test_chunked_sum_is_wave_order_invariant(rows, width, chunks, seed):
+    """Σ accumulated over chunk waves agrees with the in-core Σ for any
+    wave processing order (floating-point tolerance, not bit equality:
+    + is commutative but not associative)."""
+    from repro.core.relation import make_manifest, split_chunks
+
+    chunks = min(chunks, rows)
+    rng = np.random.default_rng(seed)
+    rel = DenseRelation(
+        jnp.asarray(rng.normal(size=(rows, width)), jnp.float32), 1
+    )
+    mani = make_manifest(rel, chunks)
+    parts = [
+        jnp.sum(c.data, axis=0) for c in split_chunks(rel, mani)
+    ]
+    want = np.asarray(jnp.sum(rel.data, axis=0))
+    order = rng.permutation(len(parts))
+    acc = jnp.zeros_like(parts[0])
+    for w in order:
+        acc = acc + parts[w]
+    np.testing.assert_allclose(np.asarray(acc), want, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(2, 8),
+    st.integers(3, 40),
+    st.integers(0, 16),
+    st.integers(0, 2**31 - 1),
+)
+def test_pad_and_mask_never_leaks_pad_rows(n, nnz, extra, seed):
+    """A padded COO Σ equals the unpadded one: COO_PAD_KEY rows are
+    masked out of every aggregate, and the pad keys never appear in a
+    gradient's key column."""
+    from repro.core.engine import RAEngine
+    from repro.core.relation import COO_PAD_KEY, CooRelation, pad_coo_nnz
+
+    rng = np.random.default_rng(seed)
+    keys = np.stack([rng.integers(0, n, nnz), rng.integers(0, n, nnz)], 1)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    coo = CooRelation(jnp.asarray(keys, jnp.int32), jnp.asarray(vals), (n, n))
+    padded = pad_coo_nnz(coo, nnz + extra)
+    q = fra.Query(
+        fra.Agg(identity_key(1), ADD,
+                fra.Select(TRUE, project_key(1), IDENT, fra.scan("E", 2))),
+        inputs=("E",),
+    )
+    eng = RAEngine(q)
+    want = eng.lower({"E": coo}).compile()({"E": coo})
+    got = eng.lower({"E": padded}).compile()({"E": padded})
+    np.testing.assert_allclose(
+        np.asarray(got.data), np.asarray(want.data), atol=1e-5
+    )
+    if extra:
+        assert np.all(np.asarray(padded.keys)[nnz:] == COO_PAD_KEY)
