@@ -122,7 +122,7 @@ def run() -> None:
         for got, want in zip(_leaves(l1, g1), base):
             np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-5)
         us = timeit(lambda: h.step(wrt=wrt), iters=5, warmup=2)
-        st = db.spill_stats
+        st = db.counters()["spill"]
         record(
             f"oocore_scale/{name}/oocore", us,
             f"waves={waves};oversub={edge_bytes / headroom:.1f}"

@@ -14,6 +14,9 @@
   oocore_scale     out-of-core streaming: GCN grad step with the edge
                    relation >=4x past the simulated device-memory
                    budget, chunk waves vs the in-core oracle
+  serving_load     async serving front door: open-loop concurrent
+                   single-row requests through db.endpoint, sustained
+                   QPS + p50/p99 latency (continuous batching on)
 
 Each suite's rows are also written to BENCH_<suite>.json.
 
@@ -36,6 +39,7 @@ def main() -> None:
         nnmf,
         oocore_scale,
         rjp_ablation,
+        serving_load,
     )
 
     suites = {
@@ -48,6 +52,7 @@ def main() -> None:
         "kernel_dispatch": kernel_dispatch.run,
         "coo_scale": coo_scale.run,
         "oocore_scale": oocore_scale.run,
+        "serving_load": serving_load.run,
     }
     names = sys.argv[1:] or list(suites)
     unknown = [n for n in names if n not in suites]

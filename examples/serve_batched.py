@@ -1,14 +1,20 @@
-"""Batched serving example: prefill a batch of prompts through the
-session-backed ``BatchServer`` (one compiled executable per (batch, seq)
-bucket in the ``repro.Database`` cache, warmed up before traffic), then
-decode tokens autoregressively from the KV cache — the `serve_step` the
-decode dry-run shapes lower (one new token against a seq_len cache).
+"""Serving example: concurrent single-prompt requests through the async
+serving front door — ``db.endpoint`` (serving/service.py).
+
+The model is registered in the session catalog (``db.register_model``),
+the endpoint is warmed (prefill compiles once per (batch, seq) bucket,
+decode once per batch bucket), and then a burst of concurrent requests
+is submitted. The endpoint coalesces them into bucketed batches
+(continuous batching), decodes them as a slot pool with early release +
+compaction, and the unified ``db.counters()`` tree shows what happened.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--arch gemma2-9b]
-      [--batch 4] [--prompt-len 32] [--gen 16]
+      [--requests 6] [--prompt-len 32] [--gen 16]
 """
 
 import argparse
+import asyncio
+import json
 import time
 
 import jax
@@ -19,13 +25,12 @@ import repro
 from repro.configs import ARCH_IDS, get_config
 from repro.data import batch_for
 from repro.models import build_model
-from repro.serving import BatchServer, make_decode_step
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="gemma2-9b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
@@ -34,56 +39,66 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+    seq = args.prompt_len
 
-    cache_len = args.prompt_len + (cfg.vis_seq or 0) + args.gen
-    db = repro.Database(max_cache_entries=4)
-    server = BatchServer(
-        model, cache_len, db=db,
-        buckets=[(args.batch, args.prompt_len)],
-    )
-    server.warmup(
-        params,
-        batch_fn=lambda b, s: {
-            k: (jnp.zeros_like(v) if hasattr(v, "shape") else v)
-            for k, v in batch_for(cfg, b, s, np.random.default_rng(1)).items()
-            if k != "labels"
-        },
-    )
-    decode = jax.jit(make_decode_step(model, db=db))
+    # non-token inputs (frames/patches for encoder/vision archs) ride
+    # along via the endpoint's make_batch hook; token-only archs skip it
+    def make_batch(tokens):
+        full = batch_for(cfg, int(tokens.shape[0]), seq, rng)
+        full.pop("labels", None)
+        full["tokens"] = tokens
+        return full
 
-    batch = batch_for(cfg, args.batch, args.prompt_len, rng)
-    batch.pop("labels", None)
+    needs_extra = any(
+        k not in ("tokens", "labels") for k in batch_for(cfg, 1, seq, rng)
+    )
+
+    db = repro.Database(max_cache_entries=16)
+    db.register_model("lm", model, params)              # -> lm@v1
+    ep = db.endpoint(
+        "lm",
+        cache_len=seq + (cfg.vis_seq or 0) + args.gen,
+        buckets=[(1, seq), (2, seq), (args.requests, seq)],
+        make_batch=make_batch if needs_extra else None,
+    )
 
     t0 = time.time()
-    logits, caches = server.prefill(params, batch)
-    print(f"serving cache after warmup+prefill: {server.cache_stats}")
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (B, 1) greedy
-    t_prefill = time.time() - t0
-    print(f"arch={args.arch} (reduced)  batch={args.batch}  "
-          f"prompt={args.prompt_len}  prefill {t_prefill*1e3:.0f} ms")
+    ep.warmup(batch_fn=(lambda b, s: make_batch(
+        jnp.zeros((b, s), jnp.int32))) if needs_extra else None)
+    print(f"arch={args.arch} (reduced)  warmup {time.time() - t0:.1f}s "
+          f"(prefill buckets {ep._prefills and len(next(iter(ep._prefills.values())).buckets)}, "
+          f"decode buckets {ep.decode_buckets})")
 
-    enc_out = None
-    if cfg.encoder_layers:
-        enc_out = model._encode(params, batch["frames"])
+    prompts = [
+        rng.integers(0, cfg.vocab, size=seq) for _ in range(args.requests)
+    ]
 
-    generated = [tok]
-    length = jnp.asarray(args.prompt_len + (cfg.vis_seq or 0), jnp.int32)
+    async def burst():
+        # concurrent submits: the endpoint coalesces whatever is in
+        # flight into one bucketed prefill + slot-pooled decode
+        return await asyncio.gather(*[
+            ep.submit(p, max_new_tokens=args.gen - (i % 3))
+            for i, p in enumerate(prompts)
+        ])
+
     t0 = time.time()
-    for i in range(args.gen - 1):
-        if enc_out is not None:
-            logits, caches = decode(params, tok, caches, length, enc_out)
-        else:
-            logits, caches = decode(params, tok, caches, length)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        generated.append(tok)
-        length = length + 1
-    t_decode = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
-    print(f"decoded {args.gen} tokens/seq in {t_decode*1e3:.0f} ms "
-          f"({args.batch * args.gen / max(t_decode, 1e-9):,.0f} tok/s batched)")
-    print("generated token ids (first sequence):", np.asarray(out[0]).tolist())
-    assert out.shape == (args.batch, args.gen)
-    assert np.all(np.asarray(out) >= 0) and np.all(np.asarray(out) < cfg.vocab)
+    outs = asyncio.run(burst())
+    dt = time.time() - t0
+    n_tok = sum(len(o.token_ids) for o in outs)
+    print(f"served {len(outs)} requests / {n_tok} tokens in {dt*1e3:.0f} ms "
+          f"({n_tok / max(dt, 1e-9):,.0f} tok/s)")
+    for o in outs[:2]:
+        print(f"  {o.model} prompt={o.prompt_len} "
+              f"latency={o.latency*1e3:.0f}ms ->",
+              np.asarray(o.token_ids).tolist())
+
+    c = db.counters()
+    print("serve counters:", json.dumps(c["serve"], indent=1))
+    assert c["serve"]["completed"] == args.requests
+    assert c["serve"]["batches"] < args.requests    # coalescing happened
+    for o in outs:
+        ids = np.asarray(o.token_ids)
+        assert np.all(ids >= 0) and np.all(ids < cfg.vocab)
     print("ok.")
 
 

@@ -15,6 +15,11 @@ See docs/session.md for the quickstart and the catalog/statistics
 semantics; the library-level staged executor underneath remains
 importable as ``repro.core.engine.RAEngine``.
 
+The same session is the **serving front door**: register a model in
+the catalog and serve it with continuous batching through
+``db.endpoint("lm", ...)`` / ``repro.serve(db, "lm", ...)`` (see
+docs/serving.md), with telemetry under ``db.counters()``.
+
 Exports are resolved lazily (PEP 562) so ``import repro`` stays free of
 jax device initialization.
 """
@@ -31,6 +36,8 @@ _LAZY = {
     "RelationStats": ("repro.core.planner", "RelationStats"),
     "SQLError": ("repro.core.sql", "SQLError"),
     "BatchServer": ("repro.serving.serve", "BatchServer"),
+    "Endpoint": ("repro.serving.service", "Endpoint"),
+    "serve": ("repro.serving.service", "serve"),
 }
 
 __all__ = sorted(_LAZY)
@@ -46,6 +53,7 @@ if TYPE_CHECKING:  # pragma: no cover — static analyzers only
     )
     from repro.core.sql import SQLError  # noqa: F401
     from repro.serving.serve import BatchServer  # noqa: F401
+    from repro.serving.service import Endpoint, serve  # noqa: F401
 
 
 def __getattr__(name):

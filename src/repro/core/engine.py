@@ -93,7 +93,7 @@ class ReshardWarning(UserWarning):
     Structured (carries the relation name and the bytes moved) and
     emitted once per *(cache entry, relation)*, so a second offending
     relation is reported too instead of being swallowed by the first.
-    See ``Compiled.reshard_stats``; fold the cost into planning with
+    See ``Compiled.counters["reshard"]``; fold the cost into planning with
     ``compile(committed=...)`` or let ``compile_auto`` / the ``Database``
     session thread it automatically."""
 
@@ -105,7 +105,7 @@ class ReshardWarning(UserWarning):
             f"committed input bytes to the planned layout (an all-to-all "
             f"the plan did not cost); pass committed= layouts to compile() "
             f"— or step through repro.Database, which auto-threads them — "
-            f"to fold it into the plan. See Compiled.reshard_stats."
+            f"to fold it into the plan. See Compiled.counters['reshard']."
         )
 
 
@@ -236,7 +236,9 @@ class Compiled:
         #: calls, calls that moved committed bytes, cumulative and
         #: last-call bytes moved by __call__'s device_put; plus the
         #: cumulative bytes of plan-aware (costed, warning-free) rechunks.
-        self.reshard_stats: Dict[str, int] = {
+        #: Read it as ``Compiled.counters["reshard"]`` (or aggregated over
+        #: a whole session as ``db.counters()["reshard"]``).
+        self._reshard: Dict[str, int] = {
             "calls": 0,
             "resharded_calls": 0,
             "bytes_moved": 0,
@@ -262,6 +264,28 @@ class Compiled:
     def dispatch(self) -> kernels.DispatchTable:
         """The kernel DispatchTable this executable was lowered under."""
         return self.lowered.dispatch
+
+    @property
+    def counters(self) -> Dict[str, Dict[str, int]]:
+        """This executable's slice of the unified telemetry tree —
+        currently ``{"reshard": {...}}`` (calls / resharded_calls /
+        bytes_moved / last_call_bytes / planned_bytes, all live dicts).
+        Sessions aggregate the same keys over every executable they
+        compiled as ``db.counters()["reshard"]``."""
+        return {"reshard": self._reshard}
+
+    @property
+    def reshard_stats(self) -> Dict[str, int]:
+        """Deprecated: read ``Compiled.counters["reshard"]`` (or the
+        session-wide aggregate ``db.counters()["reshard"]``)."""
+        warnings.warn(
+            "Compiled.reshard_stats is deprecated; read "
+            "Compiled.counters['reshard'] (or db.counters()['reshard'] "
+            "for the session-wide aggregate)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._reshard
 
     @property
     def resolutions(self) -> Dict[str, str]:
@@ -412,7 +436,7 @@ class Compiled:
             # counted on reshard_stats and warned about once — fold them
             # into the plan via compile(committed=...).
             sh_don, sh_kept = self.in_shardings
-            stats = self.reshard_stats
+            stats = self._reshard
             stats["calls"] += 1
             stats["last_call_bytes"] = moved
             stats["planned_bytes"] += sum(planned_by_rel.values())
@@ -558,7 +582,7 @@ class Lowered:
         derives it): the planner then charges candidates that would force
         a device-layout rechunk, instead of ``Compiled.__call__`` paying
         the all-to-all silently (it still counts such moves on
-        ``Compiled.reshard_stats``).
+        ``Compiled.counters["reshard"]``).
         ``stats`` maps relation names to tracked ``planner.RelationStats``
         (a ``Database`` catalog snapshot): the planner then replaces its
         Agg-size / edge-cut heuristics with measured key-domain
@@ -708,7 +732,7 @@ class Lowered:
         state once a step's outputs feed the next call — the recorded
         ``Compiled`` is returned as-is. First and later calls therefore
         produce the identical plan (bit-identical ``Compiled.plans``, the
-        same executable, ``reshard_stats`` flat at zero moved bytes)
+        same executable, ``counters["reshard"]`` flat at zero moved bytes)
         instead of flapping between a no-committed and an all-committed
         plan. Only inputs committed to a genuinely *different* layout —
         an upstream producer changed its placement — trigger a re-plan,
@@ -828,7 +852,7 @@ class StreamedCompiled:
     merged result equals the in-core step's.
 
     Duck-types ``Compiled`` for the session's introspection surface
-    (``mesh``/``plans``/``placements``/``resolutions``/``reshard_stats``/
+    (``mesh``/``plans``/``placements``/``resolutions``/``counters``/
     ``planned_spec``) by delegating to the per-wave inner ``Compiled``
     (identical across waves of equal signature); ``planned_spec`` is None
     for streamed relations — they have no single device placement, so
@@ -870,13 +894,24 @@ class StreamedCompiled:
         return self._inner.resolutions if self._inner is not None else {}
 
     @property
-    def reshard_stats(self) -> Dict[str, int]:
+    def counters(self) -> Dict[str, Dict[str, int]]:
         if self._inner is None:
-            return {
+            return {"reshard": {
                 "calls": 0, "resharded_calls": 0, "bytes_moved": 0,
                 "last_call_bytes": 0, "planned_bytes": 0,
-            }
-        return self._inner.reshard_stats
+            }}
+        return self._inner.counters
+
+    @property
+    def reshard_stats(self) -> Dict[str, int]:
+        """Deprecated: read ``counters["reshard"]`` (see ``Compiled``)."""
+        warnings.warn(
+            "reshard_stats is deprecated; read counters['reshard'] (or "
+            "db.counters()['reshard'] for the session-wide aggregate)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.counters["reshard"]
 
     def planned_spec(self, name: str):
         if name in self.plan.streamed_names or self._inner is None:

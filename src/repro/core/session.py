@@ -43,6 +43,9 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import copy
+import warnings
+import weakref
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, Optional, Sequence, Tuple, Union
@@ -89,12 +92,38 @@ class TableEntry:
     donated: bool = False
 
 
+@dataclass
+class ModelEntry:
+    """One row of the catalog's model registry: a served model under a
+    ``name@version`` coordinate. The serving front door
+    (``Database.endpoint``) resolves every request — including per-tenant
+    aliases — through these entries, so re-registering a version swaps
+    the served parameters without touching the endpoint."""
+
+    name: str
+    version: str
+    model: Any
+    params: Any
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.name, self.version)
+
+    def __str__(self) -> str:
+        return f"{self.name}@{self.version}"
+
+
 class Catalog:
     """Named relations + schemas + statistics + committed layouts — the
-    structure a database optimizer consults on every query."""
+    structure a database optimizer consults on every query — plus the
+    model registry the serving front door resolves requests through."""
 
     def __init__(self) -> None:
         self._tables: "OrderedDict[str, TableEntry]" = OrderedDict()
+        #: name → version → ModelEntry (insertion order; last = latest).
+        self._models: "OrderedDict[str, OrderedDict[str, ModelEntry]]" = (
+            OrderedDict()
+        )
 
     def __contains__(self, name: str) -> bool:
         return name in self._tables
@@ -174,6 +203,49 @@ class Catalog:
         if e is not None:
             e.layout = spec
 
+    # -- model registry (the serving front door resolves through this) -----
+
+    def put_model(
+        self, name: str, model, params, version: Optional[str] = None
+    ) -> ModelEntry:
+        """Register (or update) a served model version. ``version``
+        defaults to ``v<n+1>``; re-registering an existing version swaps
+        its model/params in place (live endpoints pick the new parameters
+        up on the next batch they form)."""
+        versions = self._models.setdefault(name, OrderedDict())
+        if version is None:
+            version = f"v{len(versions) + 1}"
+        entry = ModelEntry(name, str(version), model, params)
+        versions[entry.version] = entry
+        versions.move_to_end(entry.version)
+        return entry
+
+    def model(self, name: str, version: Optional[str] = None) -> ModelEntry:
+        """Resolve ``name[@version]`` to a registered ModelEntry (latest
+        registered version when ``version`` is None)."""
+        if version is None and "@" in name:
+            name, _, version = name.partition("@")
+        try:
+            versions = self._models[name]
+        except KeyError:
+            raise CatalogError(
+                f"model {name!r} is not registered (models: "
+                f"{sorted(self._models)}); db.register_model(...) it first"
+            ) from None
+        if version is None:
+            return next(reversed(versions.values()))
+        try:
+            return versions[str(version)]
+        except KeyError:
+            raise CatalogError(
+                f"model {name!r} has no version {version!r} "
+                f"(versions: {list(versions)})"
+            ) from None
+
+    def models(self) -> Dict[str, Tuple[str, ...]]:
+        """{model name: registered versions, oldest→latest}."""
+        return {n: tuple(v) for n, v in self._models.items()}
+
 
 # ---------------------------------------------------------------------------
 # The session
@@ -201,6 +273,37 @@ def current() -> "Database":
     if _PROCESS_DEFAULT is None:
         _PROCESS_DEFAULT = Database()
     return _PROCESS_DEFAULT
+
+
+#: field layout of the per-executable reshard counters (engine.Compiled).
+_RESHARD_KEYS = (
+    "calls", "resharded_calls", "bytes_moved", "last_call_bytes",
+    "planned_bytes",
+)
+
+
+def _serve_counters() -> Dict[str, Any]:
+    """Zeroed ``serve/`` subtree of the unified counter tree — the async
+    serving front door (serving/service.py) increments these."""
+    return {
+        "requests": 0,        # submitted to an endpoint on this session
+        "admitted": 0,        # passed the bounded admission queue
+        "completed": 0,       # futures resolved with a Completion
+        "failed": 0,          # futures resolved with an error
+        "shed_queue_full": 0,  # rejected: admission queue at max_queue
+        "shed_deadline": 0,    # rejected: deadline passed before service
+        "batches": 0,          # coalesced prefill batches executed
+        "batched_requests": 0,  # requests that shared a batch (size > 1)
+        "queue_peak": 0,       # high-water admission queue depth
+        "prefill": {"compiles": 0, "steps": 0},
+        "decode": {
+            "compiles": 0,      # decode executables built (per bucket)
+            "traces": 0,        # decode retraces (≤ one per bucket)
+            "steps": 0,         # decode steps executed
+            "rebuckets": 0,     # mid-decode compactions to a smaller bucket
+            "slot_releases": 0,  # slots freed by finished requests
+        },
+    }
 
 
 class Database:
@@ -254,10 +357,17 @@ class Database:
         self.fuse_join_agg = fuse_join_agg
         self.max_cache_entries = max_cache_entries
         self._exec_cache: "OrderedDict[Any, Any]" = OrderedDict()
-        #: hit/miss/eviction counters of the session executable cache.
-        self.cache_stats: Dict[str, int] = {
-            "hits": 0, "misses": 0, "evictions": 0,
+        #: the session's unified telemetry tree (``db.counters()``); the
+        #: ``cache`` and ``serve`` subtrees live here, ``reshard`` is
+        #: aggregated over compiled executables and ``spill`` read off the
+        #: ChunkStore at snapshot time.
+        self._counters: Dict[str, Any] = {
+            "cache": {"hits": 0, "misses": 0, "evictions": 0},
+            "serve": _serve_counters(),
         }
+        #: every executable this session compiled (weak — engine caches
+        #: keep live ones alive), for the reshard counter aggregate.
+        self._compiled_refs: "weakref.WeakSet" = weakref.WeakSet()
 
     # -- catalog front door ------------------------------------------------
 
@@ -342,13 +452,99 @@ class Database:
         relation to (None before any mesh-compiled step)."""
         return self.catalog.entry(name).layout
 
+    # -- model registry + the serving front door ---------------------------
+
+    def register_model(
+        self, name: str, model, params, *, version: Optional[str] = None
+    ) -> ModelEntry:
+        """Register a model version in the catalog's model registry —
+        what the serving front door (``db.endpoint``) resolves request
+        model/tenant coordinates through. ``version`` defaults to
+        ``v<n+1>``; re-registering a version hot-swaps its parameters
+        (live endpoints serve the new ones from the next batch on)."""
+        return self.catalog.put_model(name, model, params, version)
+
+    def model(self, name: str, version: Optional[str] = None) -> ModelEntry:
+        """Resolve ``name`` (or ``"name@version"``) from the model
+        registry — latest registered version when unversioned."""
+        return self.catalog.model(name, version)
+
+    def endpoint(self, model=None, **kwargs) -> "Any":
+        """The serving front door: an async ``Endpoint`` over this
+        session — continuous batching of concurrent requests into the
+        session's (batch, seq) bucketed executables, decode-step
+        bucketing, per-tenant model versions resolved through the
+        catalog's model registry, and bounded-queue/deadline load
+        shedding counted under ``db.counters()["serve"]``.
+
+        ``model`` is a registered model name (``"lm"`` / ``"lm@v2"``) or
+        a Model instance (auto-registered; pass ``params=``). See
+        ``repro.serving.service.Endpoint`` for the keyword surface
+        (``cache_len``, ``buckets``, ``decode_buckets``, ``max_queue``,
+        ``gather_window``, ...)."""
+        from repro.serving.service import Endpoint
+
+        return Endpoint(self, model, **kwargs)
+
+    # -- unified telemetry -------------------------------------------------
+
+    def counters(self) -> Dict[str, Any]:
+        """The session's telemetry tree — **one** structured surface for
+        every counter the stack keeps, snapshotted (mutating the returned
+        dict never touches live state)::
+
+            {"cache":   {hits, misses, evictions},          # exec cache
+             "reshard": {calls, resharded_calls, bytes_moved,
+                         last_call_bytes, planned_bytes},   # aggregated
+                                                            # over every
+                                                            # compiled step
+             "spill":   {spilled_relations, spilled_bytes,
+                         fetched_chunks, fetched_bytes},    # out-of-core
+             "serve":   {requests, admitted, completed, failed,
+                         shed_queue_full, shed_deadline, batches,
+                         batched_requests, queue_peak,
+                         prefill: {compiles, steps},
+                         decode:  {compiles, traces, steps,
+                                   rebuckets, slot_releases}}}
+
+        ``reshard`` sums the per-executable counters of every step this
+        session compiled (``Compiled.counters["reshard"]``);
+        ``last_call_bytes`` sums each live executable's most recent call.
+        The pre-unification accessors (``db.cache_stats``,
+        ``db.spill_stats``, ``Compiled.reshard_stats``,
+        ``BatchServer.cache_stats``/``spill_stats``) delegate here with a
+        ``DeprecationWarning``."""
+        reshard = dict.fromkeys(_RESHARD_KEYS, 0)
+        for comp in list(self._compiled_refs):
+            for k, v in comp.counters["reshard"].items():
+                reshard[k] = reshard.get(k, 0) + v
+        return {
+            "cache": dict(self._counters["cache"]),
+            "reshard": reshard,
+            "spill": dict(self._chunkstore.stats),
+            "serve": copy.deepcopy(self._counters["serve"]),
+        }
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        """Deprecated: read ``db.counters()["cache"]``."""
+        warnings.warn(
+            "Database.cache_stats is deprecated; read "
+            "db.counters()['cache']",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._counters["cache"]
+
     @property
     def spill_stats(self) -> Dict[str, int]:
-        """Out-of-core spill counters of the session's ChunkStore:
-        ``spilled_relations`` / ``spilled_bytes`` currently host-resident,
-        ``fetched_chunks`` / ``fetched_bytes`` moved host→device by chunk
-        waves. All zero while ``memory_budget`` is unset or everything
-        fits in core."""
+        """Deprecated: read ``db.counters()["spill"]``."""
+        warnings.warn(
+            "Database.spill_stats is deprecated; read "
+            "db.counters()['spill']",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return dict(self._chunkstore.stats)
 
     # -- the active mesh ---------------------------------------------------
@@ -510,9 +706,11 @@ class Database:
                         rewrite=self.rewrite_rules,
                     )
 
-                return _engine.StreamedCompiled(
+                streamed = _engine.StreamedCompiled(
                     wave_plan, self._chunkstore, compile_wave, lower_full
                 )
+                self._compiled_refs.add(streamed)
+                return streamed
         low = eng.lower(
             env,
             seed,
@@ -520,13 +718,15 @@ class Database:
             stats=stats,
             rewrite=self.rewrite_rules,
         )
-        return low.compile_auto(
+        compiled = low.compile_auto(
             env,
             mesh=self._step_mesh(),
             donate=donate,
             stats=stats,
             mem_budget=self.mem_budget,
         )
+        self._compiled_refs.add(compiled)
+        return compiled
 
     def _catalog_stats_for(
         self, env: Dict[str, AnyRel]
@@ -581,20 +781,22 @@ class Database:
         """One compiled executable per ``key`` in the session's LRU
         cache: returns the cached value (a hit), or ``build()``'s result
         after inserting it (a miss), evicting least-recently-used entries
-        beyond ``max_cache_entries``. ``cache_stats`` counts hits, misses
-        and evictions — the serving batch cache asserts on them."""
+        beyond ``max_cache_entries``. ``db.counters()["cache"]`` counts
+        hits, misses and evictions — the serving front door asserts on
+        them."""
+        cache = self._counters["cache"]
         hit = self._exec_cache.get(key)
         if hit is not None:
             self._exec_cache.move_to_end(key)
-            self.cache_stats["hits"] += 1
+            cache["hits"] += 1
             return hit
-        self.cache_stats["misses"] += 1
+        cache["misses"] += 1
         val = build()
         self._exec_cache[key] = val
         if self.max_cache_entries is not None:
             while len(self._exec_cache) > self.max_cache_entries:
                 self._exec_cache.popitem(last=False)
-                self.cache_stats["evictions"] += 1
+                cache["evictions"] += 1
         return val
 
 

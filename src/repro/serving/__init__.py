@@ -1,2 +1,11 @@
 from .serve import make_prefill_step, make_decode_step, init_cache  # noqa: F401
-from .serve import BatchServer  # noqa: F401
+from .serve import BucketedPrefill, BatchServer  # noqa: F401
+from .service import (  # noqa: F401
+    Completion,
+    DeadlineExceeded,
+    Endpoint,
+    EndpointClosed,
+    Overloaded,
+    ServingError,
+    serve,
+)

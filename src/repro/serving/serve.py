@@ -5,16 +5,23 @@ one new token against a seq_len-sized cache. Sliding-window layers carry
 window-sized caches; MLA carries the compressed (c_kv, k_rope) cache; SSM
 layers carry (conv window, state) — each O(1) or O(window) per step.
 
-``BatchServer`` is the session-backed front end: one compiled executable
-per (batch, seq) bucket, held in a ``repro.Database`` session's
-executable cache with LRU eviction (``max_entries``) and a
-``warmup(buckets=...)`` sweep, so traffic at mixed shapes never
-recompiles on the request path.
+``BucketedPrefill`` is the session-backed bucketing engine underneath the
+serving front door: one compiled executable per (batch, seq) bucket, held
+in a ``repro.Database`` session's executable cache with LRU eviction
+(``max_entries``) and a ``warmup(buckets=...)`` sweep, so traffic at
+mixed shapes never recompiles on the request path. It is an internal
+detail of ``serving.service.Endpoint`` (``db.endpoint`` /
+``repro.serve``) — the async request path with continuous batching,
+decode-step bucketing and load shedding lives there. The old public
+``BatchServer`` name is a one-PR ``DeprecationWarning`` shim over it.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
+import weakref
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,8 +133,83 @@ def make_prefill_step(model: Model, cache_len: int, *, mesh=None, db=None):
     return jax.jit(prefill_step, in_shardings=(_param_shardings(model, mesh), None))
 
 
-def make_decode_step(model: Model, *, mesh=None, db=None):
-    """See ``make_prefill_step`` for the ``mesh`` / ``db`` contract."""
+class _StrongRef:
+    """Callable strong-reference fallback for anchors that reject
+    weakrefs — the LRU capacity still bounds what it can pin."""
+
+    __slots__ = ("_obj",)
+
+    def __init__(self, obj):
+        self._obj = obj
+
+    def __call__(self):
+        return self._obj
+
+
+class _PlacedParamsCache:
+    """Bounded placement cache for device_put-placed parameter pytrees.
+
+    Entries are keyed on a **(weakref, id) identity pair**: ``id(params)``
+    indexes the cache, and a weak reference to the pytree's first array
+    leaf validates the hit (two distinct pytrees can recycle the same
+    ``id`` across garbage collections — the live-leaf identity check makes
+    that impossible to alias). Entries are evicted three ways: the weakref
+    callback drops an entry the moment its source params die (so a
+    long-running server never pins placed copies of stale params — the
+    historical leak: the cache held the *source* params strongly and
+    keyed on a never-evicted ``id``), LRU order bounds the cache at
+    ``capacity``, and ``clear()`` empties it."""
+
+    def __init__(self, capacity: int = 4):
+        self.capacity = capacity
+        self._entries: "OrderedDict[int, Tuple[Callable, Any]]" = (
+            OrderedDict()
+        )
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    @staticmethod
+    def _anchor(params):
+        leaves = jax.tree_util.tree_leaves(params)
+        return leaves[0] if leaves else params
+
+    def place(self, params, shardings):
+        """The ``device_put(params, shardings)`` copy, cached per live
+        params object."""
+        key = id(params)
+        anchor = self._anchor(params)
+        hit = self._entries.get(key)
+        if hit is not None and hit[0]() is anchor:
+            self._entries.move_to_end(key)
+            return hit[1]
+        placed = jax.device_put(params, shardings)
+        entries = self._entries
+
+        def _on_death(ref, _key=key):
+            ent = entries.get(_key)
+            if ent is not None and ent[0] is ref:
+                del entries[_key]
+
+        try:
+            ref: Callable = weakref.ref(anchor, _on_death)
+        except TypeError:
+            ref = _StrongRef(anchor)
+        entries[key] = (ref, placed)
+        entries.move_to_end(key)
+        while len(entries) > self.capacity:
+            entries.popitem(last=False)
+        return placed
+
+
+def make_decode_step(model: Model, *, mesh=None, db=None, on_trace=None):
+    """See ``make_prefill_step`` for the ``mesh`` / ``db`` contract.
+    ``on_trace`` (internal; the serving telemetry hook) is called once
+    per jit (re)trace of the decode step — for a mesh-placed step that is
+    at most once per (batch, cache) shape class."""
     if db is not None and mesh is None:
         mesh = db.mesh
     from repro.launch.mesh import resolve_mesh
@@ -136,39 +218,39 @@ def make_decode_step(model: Model, *, mesh=None, db=None):
     mesh = resolve_mesh(mesh)
 
     def decode_step(params, token, caches, length, enc_out=None):
+        if on_trace is not None:
+            on_trace()
         logits, caches = model.decode_step(params, token, caches, length, enc_out)
         return logits, caches
 
     if mesh is None:
         return decode_step
     # enc_out is optional, so a fixed-arity in_shardings tuple cannot be
-    # used; place the params explicitly instead — cached per params
-    # object, so the per-token hot path never re-walks the weight pytree
-    # (the cache holds the source params, pinning its identity).
+    # used; place the params explicitly instead — cached per live params
+    # object (weakref/identity keyed with LRU eviction), so the per-token
+    # hot path re-walks the weight pytree only down to its first leaf and
+    # a retired params version never leaks its placed copy.
     pshard = _param_shardings(model, mesh)
     jitted = jax.jit(decode_step)
-    placed: Dict[int, Tuple[Any, Any]] = {}
+    placed = _PlacedParamsCache()
 
     def sharded_decode(params, token, caches, length, enc_out=None):
-        hit = placed.get(id(params))
-        if hit is None or hit[0] is not params:
-            placed.clear()
-            placed[id(params)] = (params, jax.device_put(params, pshard))
-            hit = placed[id(params)]
-        return jitted(hit[1], token, caches, length, enc_out)
+        return jitted(placed.place(params, pshard), token, caches, length, enc_out)
 
+    sharded_decode._placed_cache = placed  # introspection for tests
     return sharded_decode
 
 
 # ---------------------------------------------------------------------------
-# BatchServer: the session-backed bucketed serving front end
+# BucketedPrefill: the session-backed bucketed prefill engine
 # ---------------------------------------------------------------------------
 
 
-class BatchServer:
-    """Bucketed serving over a ``repro.Database`` session: one compiled
-    prefill executable per **(batch, seq) bucket**, held in the session's
-    executable cache with LRU eviction and hit/evict accounting.
+class BucketedPrefill:
+    """Bucketed prefill over a ``repro.Database`` session: one compiled
+    executable per **(batch, seq) bucket**, held in the session's
+    executable cache with LRU eviction and hit/evict accounting
+    (``db.counters()["cache"]``).
 
     Requests are rounded up to the smallest configured bucket with the
     same sequence length (zero-padded on the **batch** dim; logits and
@@ -178,12 +260,16 @@ class BatchServer:
     unmasked recurrent (conv/SSM) state, so right-padding the sequence
     would score the pad token — pad prompts to a bucketed length in the
     tokenizer instead. ``warmup(params, ...)`` sweeps the configured
-    buckets through compilation before traffic arrives; ``cache_stats``
-    (the session's counters) reports hits / misses / evictions.
+    buckets through compilation before traffic arrives.
 
     ``db`` shares an existing session (its ``max_cache_entries`` bounds
     the cache); without one, a private session is created with
     ``max_entries`` as the bound and ``mesh`` as its active mesh.
+
+    This is the bucketing engine *inside* the serving front door — build
+    endpoints with ``db.endpoint(...)`` / ``repro.serve(db, ...)``
+    (serving/service.py), which add the async request path, continuous
+    batching, decode bucketing and load shedding on top.
     """
 
     def __init__(
@@ -195,6 +281,7 @@ class BatchServer:
         buckets: Optional[Sequence[Tuple[int, int]]] = None,
         max_entries: int = 8,
         mesh=None,
+        on_compile: Optional[Callable[[], None]] = None,
     ):
         if db is None:
             from repro.core.session import Database
@@ -206,18 +293,10 @@ class BatchServer:
         self.buckets: Optional[List[Tuple[int, int]]] = (
             sorted({(int(b), int(s)) for b, s in buckets}) if buckets else None
         )
-
-    @property
-    def cache_stats(self) -> Dict[str, int]:
-        """The session cache's hit/miss/eviction counters."""
-        return self.db.cache_stats
-
-    @property
-    def spill_stats(self) -> Dict[str, int]:
-        """The session's out-of-core spill counters (all zero unless the
-        session was built with ``memory_budget=`` and a step exceeded
-        it)."""
-        return self.db.spill_stats
+        #: telemetry hook: called once per bucket executable built (a
+        #: session-cache miss) — the endpoint counts these under
+        #: ``serve/prefill/compiles``.
+        self.on_compile = on_compile
 
     def bucket_for(self, batch: int, seq: int) -> Tuple[int, int]:
         """The smallest configured (batch, seq) bucket that fits the
@@ -238,11 +317,22 @@ class BatchServer:
             )
         return min(fitting, key=lambda bs: bs[0])
 
+    def max_batch(self, seq: int) -> Optional[int]:
+        """The largest configured bucket batch at sequence length ``seq``
+        (None in exact-shape mode) — the coalescing cap of the serving
+        front door's batch formation."""
+        if not self.buckets:
+            return None
+        fitting = [b for b, s in self.buckets if s == seq]
+        return max(fitting) if fitting else 0
+
     def _compiled(self, bucket: Tuple[int, int]):
         key = ("prefill", id(self.model), self.cache_len, bucket)
         mesh = self.db.mesh
 
         def build():
+            if self.on_compile is not None:
+                self.on_compile()
             step = make_prefill_step(self.model, self.cache_len, mesh=mesh)
             # make_prefill_step returns a jitted step when a mesh places
             # the params; jit the plain single-device step ourselves.
@@ -330,3 +420,43 @@ class BatchServer:
                     f"batch_fn=lambda b, s: {{...}} building the full "
                     f"input batch (e.g. repro.data.batch_for)"
                 ) from e
+
+
+class BatchServer(BucketedPrefill):
+    """Deprecated one-PR shim over ``BucketedPrefill``: the serving front
+    door is now ``db.endpoint(...)`` / ``repro.serve(db, ...)`` (an async
+    ``Endpoint`` with admission queueing, continuous batching and decode
+    bucketing — serving/service.py); the bare bucketing engine remains
+    importable as ``BucketedPrefill`` for non-request-path uses."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "BatchServer is deprecated: serve through db.endpoint(...) / "
+            "repro.serve(db, ...) (serving.service.Endpoint); the bare "
+            "bucketing engine is serving.serve.BucketedPrefill",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(*args, **kwargs)
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        """Deprecated: read ``db.counters()["cache"]``."""
+        warnings.warn(
+            "BatchServer.cache_stats is deprecated; read "
+            "db.counters()['cache']",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.db._counters["cache"]
+
+    @property
+    def spill_stats(self) -> Dict[str, int]:
+        """Deprecated: read ``db.counters()["spill"]``."""
+        warnings.warn(
+            "BatchServer.spill_stats is deprecated; read "
+            "db.counters()['spill']",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.db.counters()["spill"]

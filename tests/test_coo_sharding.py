@@ -509,7 +509,7 @@ def test_dense_fallback_emits_structured_warning():
 @requires8
 def test_reshard_stats_count_committed_moves_and_warn_once():
     """The silent-reshard fix: committed inputs arriving in a different
-    layout are counted on Compiled.reshard_stats, warned about once per
+    layout are counted on Compiled.counters["reshard"], warned about once per
     cache entry, and foldable into the plan via _committed_layouts."""
     mesh = make_host_mesh(model=2)
     rng = np.random.default_rng(6)
@@ -531,17 +531,17 @@ def test_reshard_stats_count_committed_moves_and_warn_once():
     with pytest.warns(ReshardWarning):
         comp(env_wrong)
     nbytes = int(env["A"].data.nbytes)
-    assert comp.reshard_stats["resharded_calls"] == 1
-    assert comp.reshard_stats["last_call_bytes"] == nbytes
+    assert comp.counters["reshard"]["resharded_calls"] == 1
+    assert comp.counters["reshard"]["last_call_bytes"] == nbytes
     with warnings.catch_warnings():
         warnings.simplefilter("error", ReshardWarning)  # once per entry
         comp(env_wrong)
-    assert comp.reshard_stats["bytes_moved"] == 2 * nbytes
-    assert comp.reshard_stats["calls"] == comp.reshard_stats["resharded_calls"] + 0
+    assert comp.counters["reshard"]["bytes_moved"] == 2 * nbytes
+    assert comp.counters["reshard"]["calls"] == comp.counters["reshard"]["resharded_calls"] + 0
     # matching layouts move nothing
     comp2 = low.compile(mesh=mesh, committed=_committed_layouts(env))
     comp2(env)
-    assert comp2.reshard_stats["last_call_bytes"] == 0
+    assert comp2.counters["reshard"]["last_call_bytes"] == 0
     # committed *replicated* inputs shard by a local slice — zero bytes
     # moved, no warning (and plan_join's _move fold charges them nothing)
     env_rep = dict(env)
@@ -552,4 +552,4 @@ def test_reshard_stats_count_committed_moves_and_warn_once():
     with warnings.catch_warnings():
         warnings.simplefilter("error", ReshardWarning)
         comp3(env_rep)
-    assert comp3.reshard_stats["last_call_bytes"] == 0
+    assert comp3.counters["reshard"]["last_call_bytes"] == 0

@@ -184,7 +184,7 @@ def test_logreg_chunked_matches_incore_across_wave_counts():
         # the data matrix streamed and the labels co-streamed with it
         assert h.last.plan.stream == "Rx"
         assert h.last.plan.co_streams == ("Ry",)
-        st = db.spill_stats
+        st = db.counters()["spill"]
         assert st["spilled_relations"] == 2
         assert st["fetched_chunks"] == 2 * want_waves
 
@@ -263,7 +263,7 @@ def test_unconstrained_budget_is_bit_identical_to_no_budget():
         np.testing.assert_array_equal(
             np.asarray(g0[name].data), np.asarray(g1[name].data)
         )
-    assert db1.spill_stats == {
+    assert db1.counters()["spill"] == {
         "spilled_relations": 0, "spilled_bytes": 0,
         "fetched_chunks": 0, "fetched_bytes": 0,
     }
@@ -366,27 +366,28 @@ class _StubModel:
         return t[..., None].astype(jnp.float32) * params, {"len": cache_len}
 
 
-def test_batch_server_warmup_with_spilled_relations():
-    from repro.serving import BatchServer
+def test_bucketed_prefill_warmup_with_spilled_relations():
+    from repro.serving import BucketedPrefill
 
     total = _logreg_bytes()
     db = _logreg_fill(repro.Database(memory_budget=total * 0.5))
     # a training step spills + streams through the same session…
     _logreg_handle(db).step()
-    assert db.spill_stats["spilled_relations"] == 2
+    assert db.counters()["spill"]["spilled_relations"] == 2
     # …and the serving cache on top of it behaves exactly as unbudgeted:
     # warmup compiles per bucket, repeats hit, the counters match
-    srv = BatchServer(
+    srv = BucketedPrefill(
         _StubModel(), cache_len=16, db=db, buckets=[(2, 8), (4, 16)]
     )
     srv.warmup(jnp.asarray(2.0))
-    assert srv.cache_stats == {"hits": 0, "misses": 2, "evictions": 0}
+    assert db.counters()["cache"] == {"hits": 0, "misses": 2, "evictions": 0}
     logits, _ = srv.prefill(
         jnp.asarray(2.0), {"tokens": jnp.ones((1, 8), jnp.int32)}
     )
     assert logits.shape == (1, 8, 1)
-    assert srv.cache_stats == {"hits": 1, "misses": 2, "evictions": 0}
-    assert srv.spill_stats == db.spill_stats
+    c = db.counters()  # one tree: serving cache next to spill stats
+    assert c["cache"] == {"hits": 1, "misses": 2, "evictions": 0}
+    assert c["spill"]["spilled_relations"] == 2
 
 
 @pytest.mark.spmd
@@ -411,8 +412,8 @@ def test_budgeted_session_never_silently_replicates():
     with warnings.catch_warnings():
         warnings.simplefilter("error", ReshardWarning)
         loss2, _ = handle.step()
-    assert handle.last.reshard_stats["last_call_bytes"] == 0
-    assert handle.last.reshard_stats["bytes_moved"] == 0
+    assert handle.last.counters["reshard"]["last_call_bytes"] == 0
+    assert handle.last.counters["reshard"]["bytes_moved"] == 0
     np.testing.assert_allclose(
         np.asarray(loss1.data), np.asarray(loss2.data), atol=ATOL
     )

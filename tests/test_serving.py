@@ -1,0 +1,452 @@
+"""The async serving front door (serving/service.py): continuous
+batching over the Database session. Covers admission + coalescing
+(concurrent single-row submits served in one prefill batch, chunked at
+the bucket cap), decode bucketing (compiled once per bucket — trace
+counters flat under traffic after warmup, the cold path compiles on
+demand), slot reuse (early finishers release mid-group, the group
+compacts to a smaller bucket), correctness against a solo-served
+oracle, per-tenant model versions + hot swap through the catalog, load
+shedding (queue-full and deadline), the serving edge cases (oversized /
+unbucketed / zero-length requests), the unified ``db.counters()`` tree,
+the one-PR deprecation shims, and the ``_PlacedParamsCache`` fix."""
+
+import asyncio
+import gc
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.serving import (
+    BucketedPrefill,
+    DeadlineExceeded,
+    Endpoint,
+    EndpointClosed,
+    Overloaded,
+)
+
+V = 11  # toy vocab
+
+
+class _TinyLM:
+    """Deterministic per-row toy LM: each row's next token is a pure
+    function of its own running token sum — batched serving must match
+    solo serving bit-for-bit, and any cross-slot leak (bad pad /
+    compaction of the cache pytree) changes the output. The cache
+    carries both layouts the repo uses: a stacked ``scan`` subtree
+    (batch on axis 1) and a flat leaf (batch on axis 0)."""
+
+    cfg = None
+
+    def prefill(self, params, batch, cache_len):
+        t = batch["tokens"]                                   # (B, S)
+        s = jnp.sum(t, axis=1, keepdims=True)                 # (B, 1)
+        nxt = (s * params).astype(jnp.int32) % V
+        caches = {
+            "scan": {"h": jnp.tile(s.astype(jnp.float32)[None], (2, 1, 1))},
+            "state": s.astype(jnp.float32),
+        }
+        return jax.nn.one_hot(nxt, V), caches                 # (B, 1, V)
+
+    def decode_step(self, params, token, caches, length, enc_out=None):
+        tok = token.astype(jnp.float32)
+        state = caches["state"] + tok
+        scan = caches["scan"]["h"] + tok[None]
+        # read the state through BOTH cache layouts: a compaction bug in
+        # either batch axis corrupts the generated tokens
+        s = (state + scan[0]) / 2.0
+        nxt = (s.astype(jnp.int32) * params.astype(jnp.int32) + length) % V
+        return (
+            jax.nn.one_hot(nxt, V),
+            {"scan": {"h": scan}, "state": state},
+        )
+
+
+def _oracle(tokens, p, n_new, seq):
+    """What _TinyLM greedily generates for one row, in plain numpy."""
+    s = int(np.sum(tokens))
+    out = [(s * p) % V]
+    length = seq
+    for _ in range(n_new - 1):
+        s += out[-1]
+        out.append((s * p + length) % V)
+        length += 1
+    return out
+
+
+def _endpoint(db=None, **kw):
+    db = db or repro.Database()
+    db.register_model("lm", _TinyLM(), jnp.asarray(3.0))
+    kw.setdefault("cache_len", 16)
+    kw.setdefault("buckets", [(1, 8), (2, 8), (4, 8)])
+    return db, db.endpoint("lm", **kw)
+
+
+def _prompts(n, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, V, size=seq).astype(np.int64) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# coalescing + correctness
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_requests_coalesce_and_match_solo_oracle():
+    db, ep = _endpoint()
+    prompts = _prompts(4)
+    budgets = [3, 5, 2, 4]  # mixed budgets: early finishers release slots
+
+    async def burst():
+        return await asyncio.gather(*[
+            ep.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, budgets)
+        ])
+
+    outs = asyncio.run(burst())
+    c = db.counters()["serve"]
+    assert c["batches"] == 1                       # one coalesced batch
+    assert c["batched_requests"] == 4
+    assert c["prefill"]["steps"] == 1
+    assert c["completed"] == 4 and c["failed"] == 0
+    # early finishers released their slots and the group compacted down
+    assert c["decode"]["slot_releases"] == 4
+    assert c["decode"]["rebuckets"] >= 1
+    for out, p, n in zip(outs, prompts, budgets):
+        assert out.model == "lm@v1" and out.prompt_len == 8
+        np.testing.assert_array_equal(
+            out.token_ids, _oracle(p, 3, n, seq=8)
+        )
+
+
+def test_group_larger_than_max_bucket_chunks():
+    db, ep = _endpoint()
+
+    async def burst():
+        return await asyncio.gather(*[
+            ep.submit(p, max_new_tokens=2) for p in _prompts(6)
+        ])
+
+    outs = asyncio.run(burst())
+    assert len(outs) == 6
+    c = db.counters()["serve"]
+    # max bucket batch is 4: six coalesced requests serve as 4 + 2
+    assert c["batches"] == 2
+    assert c["batched_requests"] == 6
+
+
+def test_endpoint_survives_consecutive_event_loops():
+    db, ep = _endpoint()
+    a = asyncio.run(ep.submit(_prompts(1)[0], max_new_tokens=2))
+    b = asyncio.run(ep.submit(_prompts(1)[0], max_new_tokens=2))
+    np.testing.assert_array_equal(a.token_ids, b.token_ids)
+    assert db.counters()["serve"]["completed"] == 2
+
+
+def test_repro_serve_is_the_endpoint_front_door():
+    db = repro.Database()
+    db.register_model("lm", _TinyLM(), jnp.asarray(2.0))
+    ep = repro.serve(db, "lm", cache_len=16, buckets=[(2, 8)])
+    assert isinstance(ep, Endpoint)
+    out = asyncio.run(ep.submit(_prompts(1)[0], max_new_tokens=2))
+    assert out.token_ids.shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# decode bucketing: warm vs cold compile counts, reuse across requests
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_compiles_every_bucket_and_traffic_adds_none():
+    db, ep = _endpoint()
+    assert ep.decode_buckets == [1, 2, 4]
+    ep.warmup()
+    c = db.counters()["serve"]
+    assert c["prefill"]["compiles"] == 3           # one per (batch, seq)
+    assert c["decode"]["compiles"] == 3            # one per decode bucket
+    warm = (c["prefill"]["compiles"], c["decode"]["compiles"],
+            c["decode"]["traces"])
+
+    async def traffic():
+        for n in (3, 2, 4, 1):                     # every bucket, twice over
+            await asyncio.gather(*[
+                ep.submit(p, max_new_tokens=3) for p in _prompts(n, seed=n)
+            ])
+
+    asyncio.run(traffic())
+    c = db.counters()["serve"]
+    # a warmed endpoint never compiles (or even retraces) on the
+    # request path: decode compiled once per bucket, not per batch
+    assert (c["prefill"]["compiles"], c["decode"]["compiles"],
+            c["decode"]["traces"]) == warm
+    assert c["decode"]["steps"] > 0
+
+
+def test_cold_endpoint_compiles_on_request_path_once_per_bucket():
+    db, ep = _endpoint()
+
+    async def one(n, seed):
+        return await asyncio.gather(*[
+            ep.submit(p, max_new_tokens=2) for p in _prompts(n, seed=seed)
+        ])
+
+    asyncio.run(one(2, 1))
+    c = db.counters()["serve"]
+    assert c["prefill"]["compiles"] == 1
+    assert c["decode"]["compiles"] == 1            # cold: compiled on demand
+    asyncio.run(one(2, 2))                         # same bucket: reused
+    c = db.counters()["serve"]
+    assert c["prefill"]["compiles"] == 1
+    assert c["decode"]["compiles"] == 1
+    assert c["decode"]["traces"] == 1
+
+
+# ---------------------------------------------------------------------------
+# load shedding + lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_sheds_with_overloaded():
+    db, ep = _endpoint(max_queue=2)
+
+    async def burst():
+        return await asyncio.gather(
+            *[ep.submit(p, max_new_tokens=2) for p in _prompts(6)],
+            return_exceptions=True,
+        )
+
+    outs = asyncio.run(burst())
+    shed = [o for o in outs if isinstance(o, Overloaded)]
+    served = [o for o in outs if not isinstance(o, Exception)]
+    # all six submits land before the scheduler first runs: two fit the
+    # queue, four shed synchronously at admission
+    assert len(shed) == 4 and len(served) == 2
+    c = db.counters()["serve"]
+    assert c["shed_queue_full"] == 4
+    assert c["admitted"] == 2 and c["completed"] == 2
+    assert c["queue_peak"] == 2
+
+
+def test_expired_deadline_sheds_at_batch_formation():
+    db, ep = _endpoint()
+
+    async def burst():
+        return await asyncio.gather(
+            ep.submit(_prompts(1)[0], max_new_tokens=2),
+            ep.submit(_prompts(1, seed=1)[0], max_new_tokens=2, deadline=0.0),
+            return_exceptions=True,
+        )
+
+    ok, dead = asyncio.run(burst())
+    assert not isinstance(ok, Exception)
+    assert isinstance(dead, DeadlineExceeded)
+    c = db.counters()["serve"]
+    assert c["shed_deadline"] == 1
+    assert c["completed"] == 1
+
+
+def test_closed_endpoint_rejects_submits():
+    db, ep = _endpoint()
+
+    async def run():
+        async with ep:
+            await ep.submit(_prompts(1)[0], max_new_tokens=1)
+        with pytest.raises(EndpointClosed):
+            await ep.submit(_prompts(1)[0])
+
+    asyncio.run(run())
+
+
+# ---------------------------------------------------------------------------
+# serving edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_unservable_requests_rejected_at_submit():
+    db, ep = _endpoint()
+
+    async def run():
+        with pytest.raises(ValueError, match="no bucket fits"):
+            await ep.submit(np.zeros(9, np.int64))  # unbucketed seq
+        with pytest.raises(ValueError, match="zero-length prompt"):
+            await ep.submit(np.zeros(0, np.int64))
+        with pytest.raises(ValueError, match="1-D token ids"):
+            await ep.submit(np.zeros((2, 8), np.int64))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            await ep.submit(np.zeros(8, np.int64), max_new_tokens=0)
+
+    asyncio.run(run())
+    c = db.counters()["serve"]
+    assert c["admitted"] == 0 and c["batches"] == 0
+
+
+def test_oversized_batch_never_forms():
+    """Submit-side bucket validation means a single row always fits, so
+    the 'request larger than the largest bucket' failure mode of the old
+    BatchServer surface is now a per-request ValueError (above) and a
+    chunked group (test_group_larger_than_max_bucket_chunks) — the
+    bucketing engine itself still refuses oversized exact batches."""
+    pre = BucketedPrefill(
+        _TinyLM(), cache_len=16, buckets=[(2, 8), (4, 8)]
+    )
+    with pytest.raises(ValueError, match="no bucket fits"):
+        pre.prefill(
+            jnp.asarray(1.0), {"tokens": jnp.zeros((8, 8), jnp.int32)}
+        )
+    assert pre.max_batch(8) == 4
+    assert pre.max_batch(5) == 0
+
+
+# ---------------------------------------------------------------------------
+# per-tenant model versions through the catalog
+# ---------------------------------------------------------------------------
+
+
+def test_tenants_pin_model_versions_and_bare_names_hot_swap():
+    db = repro.Database()
+    db.register_model("lm", _TinyLM(), jnp.asarray(3.0))   # lm@v1
+    db.register_model("lm", _TinyLM(), jnp.asarray(5.0))   # lm@v2 (latest)
+    ep = db.endpoint(
+        cache_len=16, buckets=[(2, 8)],
+        tenants={"pinned": "lm@v1", "latest": "lm"},
+    )
+    p = _prompts(1)[0]
+
+    async def pair():
+        return await asyncio.gather(
+            ep.submit(p, tenant="pinned", max_new_tokens=3),
+            ep.submit(p, tenant="latest", max_new_tokens=3),
+        )
+
+    a, b = asyncio.run(pair())
+    assert a.model == "lm@v1" and b.model == "lm@v2"
+    np.testing.assert_array_equal(a.token_ids, _oracle(p, 3, 3, 8))
+    np.testing.assert_array_equal(b.token_ids, _oracle(p, 5, 3, 8))
+    # different versions never share a batch
+    assert db.counters()["serve"]["batches"] == 2
+
+    # a new registration hot-swaps every unpinned resolution
+    db.register_model("lm", _TinyLM(), jnp.asarray(7.0))   # lm@v3
+    c = asyncio.run(ep.submit(p, tenant="latest", max_new_tokens=3))
+    assert c.model == "lm@v3"
+    np.testing.assert_array_equal(c.token_ids, _oracle(p, 7, 3, 8))
+
+    async def unknown():
+        await ep.submit(p, tenant="nobody")
+
+    with pytest.raises(ValueError, match="no model mapping"):
+        asyncio.run(unknown())
+
+
+def test_model_registry_errors():
+    db = repro.Database()
+    with pytest.raises(repro.CatalogError):
+        db.model("ghost")
+    db.register_model("lm", _TinyLM(), jnp.asarray(1.0))
+    with pytest.raises(repro.CatalogError):
+        db.model("lm@v9")
+    with pytest.raises(ValueError, match="params="):
+        db.endpoint(_TinyLM(), cache_len=8)
+    with pytest.raises(ValueError, match="no default model"):
+        ep = db.endpoint(cache_len=16, buckets=[(1, 8)])
+        asyncio.run(ep.submit(np.zeros(8, np.int64)))
+
+
+# ---------------------------------------------------------------------------
+# unified telemetry tree
+# ---------------------------------------------------------------------------
+
+
+def test_counters_tree_shape_and_snapshot_semantics():
+    db, ep = _endpoint()
+    c = db.counters()
+    assert set(c) == {"cache", "reshard", "spill", "serve"}
+    assert set(c["cache"]) == {"hits", "misses", "evictions"}
+    assert set(c["reshard"]) == {
+        "calls", "resharded_calls", "bytes_moved",
+        "last_call_bytes", "planned_bytes",
+    }
+    assert set(c["serve"]) >= {
+        "requests", "admitted", "completed", "failed",
+        "shed_queue_full", "shed_deadline", "batches",
+        "batched_requests", "queue_peak", "prefill", "decode",
+    }
+    c["serve"]["requests"] = 999   # a snapshot, not the live tree
+    c["cache"]["hits"] = 999
+    assert db.counters()["serve"]["requests"] == 0
+    assert db.counters()["cache"]["hits"] == 0
+    asyncio.run(ep.submit(_prompts(1)[0], max_new_tokens=1))
+    c = db.counters()
+    assert c["serve"]["completed"] == 1
+    assert c["cache"]["misses"] >= 1   # serving shares the session cache
+
+
+# ---------------------------------------------------------------------------
+# one-PR deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_batch_server_shim_warns_and_still_serves():
+    with pytest.warns(DeprecationWarning, match="db.endpoint"):
+        srv = repro.BatchServer(_TinyLM(), cache_len=16, buckets=[(2, 8)])
+    logits, _ = srv.prefill(
+        jnp.asarray(1.0), {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    )
+    assert logits.shape == (1, 1, V)
+    with pytest.warns(DeprecationWarning, match="counters"):
+        assert srv.cache_stats["misses"] == 1
+    with pytest.warns(DeprecationWarning, match="counters"):
+        srv.spill_stats
+
+
+def test_session_stats_shims_warn_and_delegate():
+    db = repro.Database()
+    with pytest.warns(DeprecationWarning, match="counters"):
+        assert db.cache_stats == db.counters()["cache"]
+    with pytest.warns(DeprecationWarning, match="counters"):
+        assert db.spill_stats == db.counters()["spill"]
+
+
+# ---------------------------------------------------------------------------
+# the params-placement cache fix (serve.py satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_placed_params_cache_hits_evicts_and_bounds():
+    from repro.serving.serve import _PlacedParamsCache
+
+    cache = _PlacedParamsCache(capacity=2)
+    # float64 numpy leaves: device_put must convert (x64 is off), so the
+    # placed copy cannot zero-copy-alias the source buffer and the cache
+    # entry holds no reference back to the source params
+    p1 = {"w": np.ones((4,), np.float64)}
+    placed = cache.place(p1, None)
+    assert cache.place(p1, None) is placed         # identity hit
+    assert len(cache) == 1
+
+    # the historical leak: params released by the trainer stayed pinned
+    # forever under their id. Now the weakref death callback evicts.
+    del p1
+    gc.collect()
+    assert len(cache) == 0
+
+    # LRU capacity bound with live params
+    keep = [{"w": np.full((2,), i, np.float64)} for i in range(3)]
+    for p in keep:
+        cache.place(p, None)
+    assert len(cache) == 2
+
+    # id-recycling guard: a stale entry whose anchor died is not
+    # returned for a new params object that happens to reuse the id
+    p = keep[-1]
+    ref, val = cache._entries[id(p)]
+    cache._entries[id(p)] = ((lambda: object()), val)  # stale anchor
+    fresh = cache.place(p, None)                       # miss, re-placed
+    assert cache._entries[id(p)][1] is fresh
+    assert cache._entries[id(p)][0]() is p["w"]
+
+    cache.clear()
+    assert len(cache) == 0

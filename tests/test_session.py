@@ -3,7 +3,7 @@ the one front door. Covers the catalog (schemas, statistics refreshed on
 put, donated-buffer guard), SQL/FRA round trips, statistics-driven plan
 changes vs the heuristic fallback (the acceptance "skewed key domain
 flips the join plan"), the committed-layout plan-stability guarantee
-(bit-identical plans, reshard_stats flat at zero), the per-(cache entry,
+(bit-identical plans, reshard counters flat at zero), the per-(cache entry,
 relation) ReshardWarning regression, the serving batch cache, and the
 deprecation shims."""
 
@@ -325,7 +325,7 @@ def test_plan_stability_two_calls_bit_identical_no_reshard():
     second = handle.last
     assert second is first                       # the recorded plan is reused
     assert dict(second.plans) == plans1          # bit-identical plans
-    assert second.reshard_stats["last_call_bytes"] == 0
+    assert second.counters["reshard"]["last_call_bytes"] == 0
     np.testing.assert_allclose(
         np.asarray(loss2.data), np.asarray(loss1.data), rtol=1e-6
     )
@@ -392,7 +392,7 @@ def test_reshard_warning_once_per_cache_entry_and_relation():
     with warnings.catch_warnings():
         warnings.simplefilter("error", ReshardWarning)
         comp(env_wrong)
-    assert comp.reshard_stats["resharded_calls"] == 2
+    assert comp.counters["reshard"]["resharded_calls"] == 2
 
 
 # ---------------------------------------------------------------------------
@@ -466,32 +466,32 @@ class _StubModel:
         return t[..., None].astype(jnp.float32) * params, {"len": cache_len}
 
 
-def test_batch_server_buckets_hits_and_evictions():
-    from repro.serving import BatchServer
+def test_bucketed_prefill_buckets_hits_and_evictions():
+    from repro.serving import BucketedPrefill
 
-    srv = BatchServer(
+    srv = BucketedPrefill(
         _StubModel(), cache_len=64,
         buckets=[(2, 16), (4, 32), (8, 64)], max_entries=2,
     )
     p = jnp.asarray(2.0)
     srv.warmup(p, buckets=[(2, 16), (4, 32)])
-    assert srv.cache_stats == {"hits": 0, "misses": 2, "evictions": 0}
+    assert srv.db.counters()["cache"] == {"hits": 0, "misses": 2, "evictions": 0}
 
     # smaller batch at a bucketed seq: a cache hit, batch-padded + sliced
     logits, _ = srv.prefill(p, {"tokens": jnp.ones((1, 16), jnp.int32)})
     assert logits.shape == (1, 16, 1)
-    assert srv.cache_stats["hits"] == 1
+    assert srv.db.counters()["cache"]["hits"] == 1
     np.testing.assert_allclose(np.asarray(logits), 2.0)
 
     # request needing the third bucket: a miss that evicts the LRU entry
     logits, _ = srv.prefill(p, {"tokens": jnp.ones((5, 64), jnp.int32)})
     assert logits.shape == (5, 64, 1)
-    assert srv.cache_stats == {"hits": 1, "misses": 3, "evictions": 1}
+    assert srv.db.counters()["cache"] == {"hits": 1, "misses": 3, "evictions": 1}
 
     # the evicted (4, 32) bucket misses again and evicts the next LRU
     srv.prefill(p, {"tokens": jnp.ones((4, 32), jnp.int32)})
-    assert srv.cache_stats["misses"] == 4
-    assert srv.cache_stats["evictions"] == 2
+    assert srv.db.counters()["cache"]["misses"] == 4
+    assert srv.db.counters()["cache"]["evictions"] == 2
 
     with pytest.raises(ValueError, match="no bucket fits"):
         srv.prefill(p, {"tokens": jnp.ones((16, 64), jnp.int32)})
@@ -501,13 +501,13 @@ def test_batch_server_buckets_hits_and_evictions():
         srv.prefill(p, {"tokens": jnp.ones((2, 10), jnp.int32)})
 
 
-def test_batch_server_shares_session_cache():
-    from repro.serving import BatchServer
+def test_bucketed_prefill_shares_session_cache():
+    from repro.serving import BucketedPrefill
 
     db = repro.Database(max_cache_entries=8)
-    srv = BatchServer(_StubModel(), cache_len=8, db=db)
+    srv = BucketedPrefill(_StubModel(), cache_len=8, db=db)
     srv.prefill(jnp.asarray(1.0), {"tokens": jnp.zeros((1, 4), jnp.int32)})
-    assert db.cache_stats["misses"] == 1  # lives in the session's cache
+    assert db.counters()["cache"]["misses"] == 1  # lives in the session's cache
 
 
 @pytest.mark.spmd
@@ -535,19 +535,19 @@ def test_plan_stability_on_2d_mesh():
         loss2, grads2 = handle.step()
     assert handle.last is first
     assert dict(handle.last.plans) == dict(first.plans)
-    assert handle.last.reshard_stats["last_call_bytes"] == 0
+    assert handle.last.counters["reshard"]["last_call_bytes"] == 0
     np.testing.assert_allclose(
         np.asarray(loss2.data), np.asarray(loss1.data), atol=1e-5
     )
 
 
-def test_batch_server_slices_cache_batch_for_sub_bucket_requests():
+def test_bucketed_prefill_slices_cache_batch_for_sub_bucket_requests():
     """Regression: a request smaller than its bucket gets caches sliced
     back to the request batch (scan subtrees slice axis 1 — axis 0 is
     the stacked layer axis — everything else axis 0), so decode
     continues at the request batch instead of crashing on bucket-sized
     caches."""
-    from repro.serving import BatchServer
+    from repro.serving import BucketedPrefill
 
     class CacheStub:
         cfg = None
@@ -560,7 +560,7 @@ def test_batch_server_slices_cache_batch_for_sub_bucket_requests():
             }]
             return batch["tokens"][..., None].astype(jnp.float32), caches
 
-    srv = BatchServer(CacheStub(), cache_len=8, buckets=[(4, 16)])
+    srv = BucketedPrefill(CacheStub(), cache_len=8, buckets=[(4, 16)])
     logits, caches = srv.prefill(
         jnp.asarray(1.0), {"tokens": jnp.ones((2, 16), jnp.int32)}
     )

@@ -33,9 +33,10 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 #: default gated suites (the tier1-slow lane): fresh emission
 #: BENCH_<name>.json vs baselines/<name>.json. The mesh/streaming suites
 #: run in other lanes and are gated there via ``--suites``:
-#: tier1-spmd gates coo_scale, tier1-oocore gates oocore_scale.
+#: tier1-spmd gates coo_scale, tier1-oocore gates oocore_scale,
+#: tier1-serving gates serving_load.
 SUITES = ("engine_overhead", "kernel_dispatch", "rjp_ablation")
-EXTRA_SUITES = ("coo_scale", "oocore_scale")
+EXTRA_SUITES = ("coo_scale", "oocore_scale", "serving_load")
 
 #: names considered CPU-stable: compiled/jitted steps only (the session
 #: variant is the same jitted step behind the Database front door, so
@@ -54,6 +55,11 @@ STABLE = (
     # on the CI host mesh are memcpys — stable enough for a 2x gate)
     re.compile(r"^coo_scale/.*/(replicated|sharded|oocore)$"),
     re.compile(r"^oocore_scale/.*/(incore|oocore)$"),
+    # serving lane: a warmed endpoint's request path is compiled
+    # prefill/decode steps plus asyncio scheduling; the open-loop
+    # arrival rate sits far below saturation so the percentiles track
+    # batch service time, not queueing blow-up
+    re.compile(r"^serving_load/open-loop/(p50|p99|us_per_request)$"),
 )
 
 DEFAULT_THRESHOLD = 2.0
