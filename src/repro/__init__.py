@@ -35,7 +35,8 @@ _LAZY = {
     "CooRelation": ("repro.core.relation", "CooRelation"),
     "RelationStats": ("repro.core.planner", "RelationStats"),
     "SQLError": ("repro.core.sql", "SQLError"),
-    "BatchServer": ("repro.serving.serve", "BatchServer"),
+    "Diagnostic": ("repro.analysis.diagnostics", "Diagnostic"),
+    "CheckReport": ("repro.analysis.diagnostics", "CheckReport"),
     "Endpoint": ("repro.serving.service", "Endpoint"),
     "serve": ("repro.serving.service", "serve"),
 }
@@ -51,8 +52,8 @@ if TYPE_CHECKING:  # pragma: no cover — static analyzers only
         QueryHandle,
         current,
     )
+    from repro.analysis.diagnostics import CheckReport, Diagnostic  # noqa: F401
     from repro.core.sql import SQLError  # noqa: F401
-    from repro.serving.serve import BatchServer  # noqa: F401
     from repro.serving.service import Endpoint, serve  # noqa: F401
 
 

@@ -1,0 +1,30 @@
+"""Static analysis over FRA programs and compiled plans.
+
+Three layers, all ahead of (or independent of) execution:
+
+- ``diagnostics``: the shared :class:`Diagnostic` / :class:`CheckReport`
+  record types (severity, node path, message, fix hint) used by the
+  typed checker, the SQL front end, and ``Database.explain``.
+- ``typecheck``: bottom-up schema/shape/dtype inference over an FRA
+  graph — ``check_query`` returns a :class:`CheckReport`; the engine
+  runs it as a mandatory validate stage between ``RAEngine.lower`` and
+  the rewrite stage, and ``db.check(q)`` exposes it directly.
+- ``certify``: static certificates over a ``Compiled`` /
+  ``StreamedCompiled`` plan — zero-unplanned-reshard, sharded-dim
+  divisibility, COO owner-partition soundness, wave soundness, and
+  partial-RJP grad derivability, proven from the plan records rather
+  than observed from runtime counters.
+"""
+
+from .diagnostics import CheckReport, Diagnostic
+from .typecheck import ValidationError, check_query
+from .certify import Certificate, certify
+
+__all__ = [
+    "CheckReport",
+    "Diagnostic",
+    "ValidationError",
+    "check_query",
+    "Certificate",
+    "certify",
+]

@@ -12,7 +12,7 @@ wave ``w+1`` before consuming wave ``w`` is what double-buffers the
 transfer behind compute.
 
 Counters (the session's spill counters, exposed as
-``Database.spill_stats`` / ``serving.BatchServer.spill_stats``):
+``Database.counters()["spill"]``):
 
     spilled_relations — relations currently backed by the store
     spilled_bytes     — host bytes across all stored chunks

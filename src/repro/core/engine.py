@@ -275,19 +275,6 @@ class Compiled:
         return {"reshard": self._reshard}
 
     @property
-    def reshard_stats(self) -> Dict[str, int]:
-        """Deprecated: read ``Compiled.counters["reshard"]`` (or the
-        session-wide aggregate ``db.counters()["reshard"]``)."""
-        warnings.warn(
-            "Compiled.reshard_stats is deprecated; read "
-            "Compiled.counters['reshard'] (or db.counters()['reshard'] "
-            "for the session-wide aggregate)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return self._reshard
-
-    @property
     def resolutions(self) -> Dict[str, str]:
         """``op[site] → tier`` record of every kernel-dispatch decision
         taken while lowering (e.g. ``segment_sum[E=320000,D=32,S=20000]``
@@ -433,7 +420,7 @@ class Compiled:
             # gradient seed laid out by the forward's compiled output);
             # device_put inserts the re-blocking collective and is a
             # no-op when the layout already matches. The bytes moved are
-            # counted on reshard_stats and warned about once — fold them
+            # counted on counters["reshard"] and warned about once — fold them
             # into the plan via compile(committed=...).
             sh_don, sh_kept = self.in_shardings
             stats = self._reshard
@@ -514,9 +501,15 @@ class Lowered:
         resolutions: Dict[str, str],
         program: Optional[Program] = None,
         rewrite_report: Optional[_rewrite.RewriteReport] = None,
+        check_report=None,
     ):
         self.engine = engine
         self.sig = sig
+        #: validate-stage report (analysis.typecheck.CheckReport): the
+        #: typed checker's diagnostics for the forward graph at this
+        #: signature — error-free by construction (errors raise before a
+        #: Lowered is built), warnings retained for db.check/explain.
+        self.check_report = check_report
         #: the kernel tier table this lowering resolved against.
         self.dispatch = dispatch
         #: the program this lowering executes: the engine's program as
@@ -902,17 +895,6 @@ class StreamedCompiled:
             }}
         return self._inner.counters
 
-    @property
-    def reshard_stats(self) -> Dict[str, int]:
-        """Deprecated: read ``counters["reshard"]`` (see ``Compiled``)."""
-        warnings.warn(
-            "reshard_stats is deprecated; read counters['reshard'] (or "
-            "db.counters()['reshard'] for the session-wide aggregate)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return self.counters["reshard"]
-
     def planned_spec(self, name: str):
         if name in self.plan.streamed_names or self._inner is None:
             return None
@@ -1162,6 +1144,20 @@ class RAEngine:
         hit = self._lowered.get(key)
         if hit is not None:
             return hit
+        # mandatory validate stage (repro.analysis.typecheck): schema/
+        # shape/dtype-check the forward graph at this env's shapes before
+        # the rewrite/plan/jit stages run — a malformed query fails here
+        # with node-path diagnostics instead of a trace-time error from
+        # deep inside the chunked lowering. Raises ValidationError on
+        # error-severity findings; the full report (warnings included)
+        # rides on the returned Lowered as ``check_report``.
+        from ..analysis.typecheck import ValidationError, check_query
+
+        check_report = check_query(
+            self.forward_query, env, fuse_join_agg=self.fuse_join_agg
+        )
+        if not check_report.ok:
+            raise ValidationError(check_report)
         abstract_env = {k: _abstract(v) for k, v in env.items()}
         abstract_seed = None if seed is None else _abstract(seed)
         program = None
@@ -1191,6 +1187,7 @@ class RAEngine:
             resolutions,
             program=program,
             rewrite_report=report,
+            check_report=check_report,
         )
         self._lowered[key] = low
         return low

@@ -302,6 +302,7 @@ def _serve_counters() -> Dict[str, Any]:
             "steps": 0,         # decode steps executed
             "rebuckets": 0,     # mid-decode compactions to a smaller bucket
             "slot_releases": 0,  # slots freed by finished requests
+            "eos_stops": 0,      # slots released early on an EOS token
         },
     }
 
@@ -504,16 +505,15 @@ class Database:
                          shed_queue_full, shed_deadline, batches,
                          batched_requests, queue_peak,
                          prefill: {compiles, steps},
-                         decode:  {compiles, traces, steps,
-                                   rebuckets, slot_releases}}}
+                         decode:  {compiles, traces, steps, rebuckets,
+                                   slot_releases, eos_stops}}}
 
         ``reshard`` sums the per-executable counters of every step this
         session compiled (``Compiled.counters["reshard"]``);
-        ``last_call_bytes`` sums each live executable's most recent call.
-        The pre-unification accessors (``db.cache_stats``,
-        ``db.spill_stats``, ``Compiled.reshard_stats``,
-        ``BatchServer.cache_stats``/``spill_stats``) delegate here with a
-        ``DeprecationWarning``."""
+        ``last_call_bytes`` sums each live executable's most recent
+        call. This is the single telemetry surface — the pre-unification
+        accessors (``cache_stats``/``spill_stats``/``reshard_stats``)
+        are gone."""
         reshard = dict.fromkeys(_RESHARD_KEYS, 0)
         for comp in list(self._compiled_refs):
             for k, v in comp.counters["reshard"].items():
@@ -524,28 +524,6 @@ class Database:
             "spill": dict(self._chunkstore.stats),
             "serve": copy.deepcopy(self._counters["serve"]),
         }
-
-    @property
-    def cache_stats(self) -> Dict[str, int]:
-        """Deprecated: read ``db.counters()["cache"]``."""
-        warnings.warn(
-            "Database.cache_stats is deprecated; read "
-            "db.counters()['cache']",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return self._counters["cache"]
-
-    @property
-    def spill_stats(self) -> Dict[str, int]:
-        """Deprecated: read ``db.counters()["spill"]``."""
-        warnings.warn(
-            "Database.spill_stats is deprecated; read "
-            "db.counters()['spill']",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return dict(self._chunkstore.stats)
 
     # -- the active mesh ---------------------------------------------------
 
@@ -620,6 +598,48 @@ class Database:
                 )
         return QueryHandle(self, q, default_wrt=None if wrt is None else tuple(wrt))
 
+    def check(self, q: Union[fra.Query, fra.Node], *, wrt: Sequence[str] = ()):
+        """Statically check an FRA query (or bare graph root) against the
+        catalog: the typed checker (``repro.analysis.typecheck``) infers
+        schemas/shapes/dtypes bottom-up and returns a ``CheckReport`` of
+        node-path diagnostics — compiler-guaranteed failures as errors
+        (bad join keys, non-permutation σ, non-additive Σ, COO ⋈ COO...),
+        hazards as warnings (f32→f64 promotion, statically empty
+        selections, stale statistics, non-divisible sharded extents,
+        partial-RJP gradients for ``wrt`` inputs). Relations, statistics,
+        key-attribute names and the mesh geometry are sourced from the
+        catalog exactly as a compiled step would source them. Purely
+        observational — nothing is lowered or cached; the same checker
+        runs as the engine's mandatory validate stage, which *raises* on
+        the error-severity findings reported here."""
+        from repro.analysis.typecheck import check_query
+
+        if isinstance(q, fra.Node):
+            q = fra.Query(
+                q, tuple(sorted({s.name for s in q.table_scans()}))
+            )
+        names = _base_names([q.root])
+        env = {
+            n: self.catalog.entry(n).relation
+            for n in names
+            if n in self.catalog
+        }
+        stats = self.catalog.snapshot(names)
+        schema = self.catalog.schema()
+        mesh = self.mesh
+        geometry = (
+            planner.MeshGeometry.from_mesh(mesh) if mesh is not None else None
+        )
+        return check_query(
+            q,
+            env,
+            stats=stats,
+            schema=schema,
+            geometry=geometry,
+            wrt=tuple(wrt),
+            fuse_join_agg=self.fuse_join_agg,
+        )
+
     def explain(self, q: Union[fra.Query, fra.Node]) -> str:
         """What the rewrite stage would do to ``q`` against the current
         catalog: the query tree before, every cost-gate verdict (with the
@@ -657,6 +677,12 @@ class Database:
             lines += [
                 "  " + ln for ln in rewritten.root.pretty().splitlines()
             ]
+        lines.append("diagnostics:")
+        report = self.check(q)
+        if report.diagnostics:
+            lines += ["  " + ln for ln in report.render().splitlines()]
+        else:
+            lines.append("  (none)")
         return "\n".join(lines)
 
     # -- staged execution (the engine underneath) --------------------------
@@ -846,6 +872,15 @@ class QueryHandle:
         self._full_prog: Optional[GradientProgram] = None
         #: the most recently used Compiled (plans/placements/resolutions).
         self.last: Optional[Any] = None
+
+    def check(self, *, wrt: Optional[Sequence[str]] = None):
+        """``db.check`` on this handle's query (see ``Database.check``);
+        ``wrt`` defaults to the handle's gradient targets, so partial-RJP
+        warnings cover exactly the inputs ``grad``/``step`` would
+        differentiate."""
+        if wrt is None:
+            wrt = self.default_wrt or self.query.inputs
+        return self.db.check(self.query, wrt=tuple(wrt))
 
     # -- environments off the catalog -------------------------------------
 

@@ -39,6 +39,7 @@ Example (paper §2.3):
 from __future__ import annotations
 
 import re
+from contextvars import ContextVar
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -69,8 +70,34 @@ _FN_ALIASES = {
 _AGG_NAMES = {"SUM": "add", "MAX": "max"}
 
 
+# the statement being compiled, used as the Diagnostic node path so an
+# error in a multi-statement script names the offending stmt/view
+_CURRENT_STMT: ContextVar[str] = ContextVar("_CURRENT_STMT", default="script")
+
+
 class SQLError(ValueError):
-    pass
+    """A SQL frontend error carrying a structured ``Diagnostic``.
+
+    ``str(err)`` renders as ``<node_path>: <message> (hint: ...)`` so
+    existing ``except SQLError`` / message-matching callers keep
+    working; ``err.diagnostic`` exposes the severity/code/node-path/hint
+    record for programmatic consumers (same type the FRA checker
+    emits — see ``repro.analysis.diagnostics``)."""
+
+    def __init__(self, message: str = "", *, code: str = "sql",
+                 hint: str = "", diagnostic=None):
+        from ..analysis.diagnostics import Diagnostic
+
+        if diagnostic is None:
+            diagnostic = Diagnostic(
+                severity="error",
+                code=code,
+                node_path=_CURRENT_STMT.get(),
+                message=str(message),
+                hint=hint,
+            )
+        self.diagnostic = diagnostic
+        super().__init__(diagnostic.render_inline())
 
 
 # ---------------------------------------------------------------------------
@@ -305,10 +332,16 @@ def _kernel_name(fn: str) -> str:
     if fn.upper() in ("AVG", "MIN", "COUNT", "STDDEV", "MEDIAN", "VAR"):
         raise SQLError(
             f"unsupported aggregate {fn!r} "
-            f"(supported aggregates: {sorted(_AGG_NAMES)})"
+            f"(supported aggregates: {sorted(_AGG_NAMES)})",
+            code="unsupported-aggregate",
+            hint="only additive-monoid aggregates differentiate; "
+                 "rewrite AVG as SUM over a pre-scaled value",
         )
     raise SQLError(f"unknown kernel function {fn!r} "
-                   f"(registered: {sorted(set(_BIN) | set(_UNARY))})")
+                   f"(registered: {sorted(set(_BIN) | set(_UNARY))})",
+                   code="unknown-kernel",
+                   hint="register the kernel in core/kernels.py or use a "
+                        "registered alias (matrix_multiply, multiply, add)")
 
 
 def _key_pos(rel: _Rel, attr: str, table: str) -> int:
@@ -317,7 +350,10 @@ def _key_pos(rel: _Rel, attr: str, table: str) -> int:
     except ValueError:
         raise SQLError(
             f"{table}.{attr} is not a key attribute of {table} "
-            f"(keys: {rel.key_attrs})"
+            f"(keys: {rel.key_attrs})",
+            code="unknown-column",
+            hint=f"key columns of {table} are {list(rel.key_attrs)}; "
+                 "any other attribute refers to the tuple's value",
         ) from None
 
 
@@ -334,13 +370,23 @@ def _compile_select(
     order: List[str] = []
     for name, alias in stmt.tables:
         if name not in env:
-            raise SQLError(f"unknown relation {name!r}")
+            raise SQLError(
+                f"unknown relation {name!r}",
+                code="unknown-relation",
+                hint=f"known relations and views: {sorted(env)}",
+            )
         if alias in rels:
-            raise SQLError(f"duplicate table alias {alias!r}")
+            raise SQLError(f"duplicate table alias {alias!r}",
+                           code="duplicate-alias")
         rels[alias] = env[name]
         order.append(alias)
     if len(order) > 2:
-        raise SQLError("at most two tables per SELECT (use views to chain)")
+        raise SQLError(
+            "at most two tables per SELECT (use views to chain)",
+            code="too-many-tables",
+            hint="chain joins through named views: "
+                 "v := SELECT ... FROM a, b ...; SELECT ... FROM v, c ...",
+        )
 
     val = stmt.val_item
     # value argument tables, in call order
@@ -350,9 +396,16 @@ def _compile_select(
         vargs = [val.col] if val.col is not None else []
     for a in vargs:
         if a.table not in rels:
-            raise SQLError(f"unknown table {a.table!r} in value expression")
+            raise SQLError(f"unknown table {a.table!r} in value expression",
+                           code="unknown-table",
+                           hint=f"tables in scope: {sorted(rels)}")
         if not _is_value_attr(rels[a.table], a.attr):
-            raise SQLError(f"{a.table}.{a.attr} is a key, not a value")
+            raise SQLError(
+                f"{a.table}.{a.attr} is a key, not a value",
+                code="key-as-value",
+                hint="kernel arguments must be value attributes; key "
+                     "columns only join, select, and group",
+            )
 
     if len(order) == 1:
         return _compile_single(stmt, rels, order[0], vargs)
@@ -404,7 +457,10 @@ def _compile_single(stmt, rels, t, vargs) -> _Rel:
     if [c.attr for c in grp_cols] != [c.attr for c, _ in stmt.key_items]:
         raise SQLError(
             f"GROUP BY columns {[c.attr for c in grp_cols]} must match the "
-            f"SELECT key columns {[c.attr for c, _ in stmt.key_items]}"
+            f"SELECT key columns {[c.attr for c, _ in stmt.key_items]}",
+            code="group-by-mismatch",
+            hint="list the same key columns, in the same order, in both "
+                 "the SELECT items and the GROUP BY clause",
         )
     grp = KeyFn(tuple(In(_key_pos(rel, c.attr, t)) for c in grp_cols))
     node = fra.Agg(grp, agg(val.aggfn), child)
@@ -458,7 +514,10 @@ def _compile_join(stmt, rels, order, vargs) -> _Rel:
     if [c.attr for c in grp_cols] != [c.attr for c, _ in stmt.key_items]:
         raise SQLError(
             f"GROUP BY columns {[c.attr for c in grp_cols]} must match the "
-            f"SELECT key columns {[c.attr for c, _ in stmt.key_items]}"
+            f"SELECT key columns {[c.attr for c, _ in stmt.key_items]}",
+            code="group-by-mismatch",
+            hint="list the same key columns, in the same order, in both "
+                 "the SELECT items and the GROUP BY clause",
         )
 
     from .keys import join_equiv_classes
@@ -513,17 +572,32 @@ def compile_sql(
         env[name] = _Rel(leaf, tuple(attrs))
 
     last: Optional[_Rel] = None
-    for name, stmt in stmts:
-        rel = _compile_select(stmt, env)
-        if name is not None:
-            if name in env:
-                raise SQLError(f"view {name!r} shadows an existing relation")
-            env[name] = rel
+    for i, (name, stmt) in enumerate(stmts):
+        label = f"stmt[{i}]" if name is None else f"stmt[{i}]:{name}"
+        token = _CURRENT_STMT.set(label)
+        try:
+            rel = _compile_select(stmt, env)
+            if name is not None:
+                if name in env:
+                    raise SQLError(
+                        f"view {name!r} shadows an existing relation",
+                        code="view-shadows-relation",
+                        hint="pick a view name outside the schema: "
+                             f"{sorted(schema)}",
+                    )
+                env[name] = rel
+        finally:
+            _CURRENT_STMT.reset(token)
         last = rel
     assert last is not None
     missing = set(inputs) - {s.name for s in last.node.table_scans()}
     if missing:
-        raise SQLError(f"declared inputs never scanned: {missing}")
+        raise SQLError(
+            f"declared inputs never scanned: {missing}",
+            code="unused-input",
+            hint="every wrt= input must appear in a FROM clause that "
+                 "reaches the final statement",
+        )
     return fra.Query(last.node, inputs=tuple(inputs))
 
 

@@ -279,7 +279,8 @@ def catalog_shardings(db, mesh=None) -> Dict[str, NamedSharding]:
     a compiled plan committed to (``Database.layout``) — the dict to
     ``device_put`` freshly loaded inputs against so they arrive at the
     planned placement and the session's plan-stability record applies
-    from the first step (``Compiled.reshard_stats`` stays flat at zero).
+    from the first step (``Compiled.counters["reshard"]`` stays flat at
+    zero).
     ``mesh`` defaults to the session's active mesh; relations no plan has
     placed yet are omitted."""
     mesh = mesh if mesh is not None else db.mesh

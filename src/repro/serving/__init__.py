@@ -1,5 +1,5 @@
 from .serve import make_prefill_step, make_decode_step, init_cache  # noqa: F401
-from .serve import BucketedPrefill, BatchServer  # noqa: F401
+from .serve import BucketedPrefill  # noqa: F401
 from .service import (  # noqa: F401
     Completion,
     DeadlineExceeded,

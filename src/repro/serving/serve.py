@@ -12,13 +12,11 @@ in a ``repro.Database`` session's executable cache with LRU eviction
 mixed shapes never recompiles on the request path. It is an internal
 detail of ``serving.service.Endpoint`` (``db.endpoint`` /
 ``repro.serve``) — the async request path with continuous batching,
-decode-step bucketing and load shedding lives there. The old public
-``BatchServer`` name is a one-PR ``DeprecationWarning`` shim over it.
+decode-step bucketing and load shedding lives there.
 """
 
 from __future__ import annotations
 
-import warnings
 import weakref
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -118,7 +116,7 @@ def make_prefill_step(model: Model, cache_len: int, *, mesh=None, db=None):
     the launch/sharding.py parameter layout — ``make_host_mesh`` /
     ``make_production_mesh`` are the canonical constructors. ``db``
     (a ``repro.Database``) supplies the mesh from the session instead;
-    ``BatchServer`` is the bucketed front end over this."""
+    ``BucketedPrefill`` is the bucketed front end over this."""
     if db is not None and mesh is None:
         mesh = db.mesh
     from repro.launch.mesh import resolve_mesh
@@ -420,43 +418,3 @@ class BucketedPrefill:
                     f"batch_fn=lambda b, s: {{...}} building the full "
                     f"input batch (e.g. repro.data.batch_for)"
                 ) from e
-
-
-class BatchServer(BucketedPrefill):
-    """Deprecated one-PR shim over ``BucketedPrefill``: the serving front
-    door is now ``db.endpoint(...)`` / ``repro.serve(db, ...)`` (an async
-    ``Endpoint`` with admission queueing, continuous batching and decode
-    bucketing — serving/service.py); the bare bucketing engine remains
-    importable as ``BucketedPrefill`` for non-request-path uses."""
-
-    def __init__(self, *args, **kwargs):
-        warnings.warn(
-            "BatchServer is deprecated: serve through db.endpoint(...) / "
-            "repro.serve(db, ...) (serving.service.Endpoint); the bare "
-            "bucketing engine is serving.serve.BucketedPrefill",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        super().__init__(*args, **kwargs)
-
-    @property
-    def cache_stats(self) -> Dict[str, int]:
-        """Deprecated: read ``db.counters()["cache"]``."""
-        warnings.warn(
-            "BatchServer.cache_stats is deprecated; read "
-            "db.counters()['cache']",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return self.db._counters["cache"]
-
-    @property
-    def spill_stats(self) -> Dict[str, int]:
-        """Deprecated: read ``db.counters()["spill"]``."""
-        warnings.warn(
-            "BatchServer.spill_stats is deprecated; read "
-            "db.counters()['spill']",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return self.db.counters()["spill"]

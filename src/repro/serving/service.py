@@ -203,6 +203,12 @@ class Endpoint:
         in flight — under sustained load that is plenty.
     max_new_tokens:
         per-request default generation budget.
+    eos_token:
+        optional end-of-sequence token id: a slot whose latest generated
+        token equals it is released immediately (counted on
+        ``counters["serve"]["decode"]["eos_stops"]``) instead of
+        decoding to its ``max_new_tokens`` budget. None (default)
+        disables early stop.
     make_batch:
         optional ``tokens (B, S) → batch dict`` hook for models whose
         prefill reads more than ``{"tokens": ...}`` (vision/encoder
@@ -224,6 +230,7 @@ class Endpoint:
         max_queue: Optional[int] = 64,
         gather_window: float = 0.0,
         max_new_tokens: int = 16,
+        eos_token: Optional[int] = None,
         make_batch: Optional[Callable[[Any], Dict[str, Any]]] = None,
     ):
         self.db = db
@@ -246,6 +253,7 @@ class Endpoint:
         self._max_queue = max_queue
         self._gather_window = float(gather_window)
         self._max_new_tokens = int(max_new_tokens)
+        self._eos_token = None if eos_token is None else int(eos_token)
         self._make_batch = make_batch
 
         self._default: Optional[Tuple[str, Optional[str]]] = None
@@ -527,12 +535,26 @@ class Endpoint:
             )
         slots: List[Optional[_Request]] = list(reqs) + [None] * (bucket - k)
 
+        eos = self._eos_token
         while True:
             for i, r in enumerate(slots):
-                if r is not None and len(r.generated) >= r.max_new:
+                if r is None:
+                    continue
+                # EOS early stop: the model ended the sequence, so the
+                # slot frees now (and may trigger a rebucket below)
+                # instead of burning decode steps to the max_new budget
+                eos_hit = (
+                    eos is not None
+                    and r.generated
+                    and r.generated[-1] == eos
+                    and len(r.generated) < r.max_new
+                )
+                if eos_hit or len(r.generated) >= r.max_new:
                     self._complete(r)
                     slots[i] = None
                     c["decode"]["slot_releases"] += 1
+                    if eos_hit:
+                        c["decode"]["eos_stops"] += 1
             active = [i for i, r in enumerate(slots) if r is not None]
             if not active:
                 return

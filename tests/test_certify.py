@@ -1,0 +1,220 @@
+"""The static plan certifier (``repro.analysis.certify``): certificates
+*prove* plan properties off the compile records — zero-unplanned-reshard
+execution, sharded-extent divisibility, COO owner-partition soundness,
+and RJP grad-derivability — before any execution pays for them. The
+spmd-marked test cross-checks the proof against the runtime reshard
+counters on the 8-device lane."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro
+from repro.analysis import Certificate, certify
+from repro.analysis.certify import certify_grad
+from repro.core import fra
+from repro.core.engine import ReshardWarning, engine_for
+from repro.core.kernels import ADD, MATMUL, MUL
+from repro.core.keys import L, R, eq_pred, identity_key, jproj, project_key
+from repro.core.relation import CooRelation, DenseRelation
+from repro.launch.mesh import make_host_mesh
+
+requires8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (tier1-spmd lane: "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def _matmul_query():
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    return fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+
+
+def _matmul_env(n=4, m=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "A": DenseRelation(
+            jnp.asarray(rng.normal(size=(n, n, m, m)), jnp.float32), 2
+        ),
+        "B": DenseRelation(
+            jnp.asarray(rng.normal(size=(n, n, m, m)), jnp.float32), 2
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mesh-less certificates: trivially proven, still structured
+# ---------------------------------------------------------------------------
+
+
+def test_meshless_plan_certifies_trivially():
+    q = _matmul_query()
+    env = _matmul_env()
+    comp = engine_for(q).lower(env).compile()
+    cert = certify(comp, env, query=q)
+    assert isinstance(cert, Certificate)
+    assert cert.kind == "in-core"
+    assert cert.ok and cert.zero_unplanned_reshard
+    assert "mesh-less" in cert.reshard["reason"]
+    assert cert.grad is not None and cert.grad["full_rjp"]
+    d = cert.to_dict()
+    assert d["ok"] and d["kind"] == "in-core"
+    assert "OK" in cert.render()
+
+
+def test_certify_rejects_non_compiled():
+    with pytest.raises(TypeError, match="cannot certify"):
+        certify(object(), {})
+
+
+# ---------------------------------------------------------------------------
+# grad derivability, pre-compile
+# ---------------------------------------------------------------------------
+
+
+def test_certify_grad_full_vs_partial():
+    # matmul: both input keys solvable from the Σ∘⋈ output → full RJP
+    g = certify_grad(_matmul_query(), ("A", "B"))
+    assert g["full_rjp"]
+    assert set(g["joins"]) == {"Σ/⋈"}
+    assert g["joins"]["Σ/⋈"] == {"left": "solvable", "right": "solvable"}
+
+    # a ⋈ whose output keeps only B's free key: A's key is unsolvable
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(R(1)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(
+        fra.Agg(identity_key(1), ADD, join), inputs=("A", "B")
+    )
+    g = certify_grad(q, ("A",))
+    assert not g["full_rjp"]
+    assert g["joins"]["Σ/⋈"]["left"] == "partial"
+    assert g["joins"]["Σ/⋈"]["right"] == "n/a"  # B is not a wrt input
+
+
+# ---------------------------------------------------------------------------
+# COO owner-partition soundness (no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+def _owner_coo(offsets, owners, extent=8):
+    keys = np.stack([np.asarray(owners, np.int32),
+                     np.zeros(len(owners), np.int32)], axis=1)
+    return CooRelation(
+        keys, np.ones((len(owners),), np.float32), (extent, extent),
+        owner_dim=0, shard_offsets=tuple(offsets),
+    )
+
+
+def test_coo_owner_partition_soundness_proof():
+    q = _matmul_query()
+    env = _matmul_env()
+    comp = engine_for(q).lower(env).compile()
+    # sound: 2 shards of 2 rows each, owner-sorted, offsets = first keys
+    sound = dict(env, E=_owner_coo((0, 4), (0, 2, 4, 6)))
+    assert certify(comp, sound).coo["relations"]["E"]["ok"]
+    # broken offsets: shard 1 claims first owner 3 but holds 4
+    broken = dict(env, E=_owner_coo((0, 3), (0, 2, 4, 6)))
+    cert = certify(comp, broken)
+    assert not cert.coo["relations"]["E"]["offsets_consistent"]
+    assert not cert.ok
+    # unsorted owners: monotone offsets but rows out of owner order
+    unsorted = dict(env, E=_owner_coo((0, 1), (0, 5, 1, 6)))
+    assert not certify(comp, unsorted).coo["relations"]["E"]["ok"]
+
+
+# ---------------------------------------------------------------------------
+# spmd lane: the proof agrees with the runtime counters
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.spmd
+@requires8
+def test_certificate_proves_zero_unplanned_reshard_on_mesh():
+    mesh = make_host_mesh(model=2)
+    q = _matmul_query()
+    env = _matmul_env()
+    low = engine_for(q).lower(env)
+    comp = low.compile_auto(env, mesh=mesh)
+
+    # uncommitted inputs place for free: proven before any call
+    cert = certify(comp, env)
+    assert cert.kind == "in-core"
+    assert cert.zero_unplanned_reshard and cert.ok
+    assert cert.divisibility["ok"]
+    statuses = {r["status"] for r in cert.reshard["relations"].values()}
+    assert statuses <= {"uncommitted", "aligned"}
+
+    # commit every input to its planned layout: proof says aligned, and
+    # the runtime reshard counters agree (zero bytes moved)
+    committed_env = {}
+    for name, rel in env.items():
+        spec = comp.planned_spec(name)
+        arr = (
+            jax.device_put(rel.data, NamedSharding(mesh, spec))
+            if spec is not None
+            else rel.data
+        )
+        committed_env[name] = DenseRelation(arr, rel.key_arity)
+    comp2 = low.compile_auto(committed_env, mesh=mesh)
+    cert2 = certify(comp2, committed_env)
+    assert cert2.zero_unplanned_reshard and cert2.ok
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", category=ReshardWarning)
+        comp2(committed_env)
+    assert comp2.counters["reshard"]["last_call_bytes"] == 0
+
+    # adversarial: an input committed against the plan (and not in the
+    # plan's rechunk stage) breaks the proof
+    wrong = NamedSharding(mesh, P(None, None, "model", None))
+    bad_env = dict(committed_env)
+    bad_env["A"] = DenseRelation(
+        jax.device_put(env["A"].data, wrong), 2
+    )
+    bad_committed = {
+        n: (comp2.planned_spec(n) if n != "A" else wrong.spec)
+        for n in bad_env
+    }
+    cert3 = certify(comp2, bad_env, committed=bad_committed)
+    if cert3.reshard["relations"]["A"]["status"] == "unplanned":
+        assert not cert3.zero_unplanned_reshard and not cert3.ok
+
+
+@pytest.mark.spmd
+@requires8
+def test_session_step_certifies_clean_end_to_end():
+    """Database front door: after a step, the recorded executable and the
+    catalog's committed layouts certify zero-unplanned-reshard."""
+    rng = np.random.default_rng(0)
+    db = repro.Database()
+    db.use_mesh(make_host_mesh(model=2))
+    db.put("Rx", jnp.asarray(rng.normal(size=(64, 8)), jnp.float32),
+           keys=("row", "col"))
+    db.put("Ry", jnp.asarray((rng.uniform(size=64) > 0.5), jnp.float32),
+           keys=("row",))
+    db.put("theta", jnp.asarray(rng.normal(size=8) * 0.1, jnp.float32),
+           keys=("col",))
+    h = db.sql(
+        """
+        mm   := SELECT Rx.row, SUM(multiply(Rx.val, theta.val))
+                FROM Rx, theta WHERE Rx.col = theta.col GROUP BY Rx.row;
+        pred := SELECT mm.row, logistic(mm.val) FROM mm;
+        SELECT SUM(xent(pred.val, Ry.val)) FROM pred, Ry
+        WHERE pred.row = Ry.row
+        """,
+        wrt=("theta",),
+    )
+    h.step()
+    env = {n: db.get(n) for n in ("Rx", "Ry", "theta")}
+    cert = certify(h.last, env, query=h.query, wrt=("theta",))
+    assert cert.zero_unplanned_reshard and cert.ok
+    assert cert.grad is not None

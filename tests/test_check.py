@@ -1,0 +1,239 @@
+"""Golden-file tests for the typed FRA checker (``repro.analysis``):
+each malformed query renders a stable, reviewed diagnostic report —
+severity, rule code, node path, provenance labels, fix hint. Regenerate
+after an intentional renderer change with::
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_check.py
+
+and review the diff like any other behavior change."""
+
+import os
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import repro
+from repro.analysis import ValidationError, check_query
+from repro.core import fra
+from repro.core.kernels import ADD, IDENT, MATMUL, MAX, MUL
+from repro.core.keys import (
+    TRUE,
+    In,
+    KeyFn,
+    L,
+    R,
+    SelPred,
+    eq_pred,
+    identity_key,
+    jproj,
+    project_key,
+)
+from repro.core.planner import MeshGeometry
+from repro.core.relation import CooRelation, DenseRelation
+
+GOLDEN = Path(__file__).parent / "golden" / "check"
+
+
+def _dense(*extents, dtype=np.float32):
+    return DenseRelation(np.zeros(extents, dtype=dtype), len(extents))
+
+
+def _coo(nnz, *extents):
+    return CooRelation(
+        np.zeros((nnz, len(extents)), np.int32),
+        np.zeros((nnz,), np.float32),
+        tuple(extents),
+    )
+
+
+SCHEMA = {"A": ("row", "col"), "B": ("row", "col"), "E": ("src", "dst")}
+
+
+def case_unknown_relation():
+    return check_query(fra.scan("Ghost", 2), env={"A": _dense(3, 4)})
+
+
+def case_arity_mismatch():
+    return check_query(fra.scan("A", 3), env={"A": _dense(3, 4)})
+
+
+def case_join_extent_mismatch():
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+    return check_query(
+        q,
+        env={"A": _dense(3, 4), "B": _dense(5, 6)},
+        schema=SCHEMA,
+    )
+
+
+def case_dtype_promotion():
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+    return check_query(
+        q,
+        env={"A": _dense(3, 4), "B": _dense(4, 6, dtype=np.float64)},
+        schema=SCHEMA,
+    )
+
+
+def case_non_permutation_select():
+    node = fra.Select(TRUE, KeyFn((In(0),)), IDENT, fra.scan("A", 2))
+    return check_query(node, env={"A": _dense(3, 4)})
+
+
+def case_projects_fixed():
+    node = fra.Select(
+        SelPred(((0, 1),)), identity_key(2), IDENT,
+        fra.scan("A", 2),
+    )
+    return check_query(node, env={"A": _dense(3, 4)}, schema=SCHEMA)
+
+
+def case_duplicate_group():
+    node = fra.Agg(KeyFn((In(0), In(0))), ADD, fra.scan("A", 2))
+    return check_query(node, env={"A": _dense(3, 4)})
+
+
+def case_non_additive_agg():
+    node = fra.Agg(project_key(0), MAX, fra.scan("A", 2))
+    return check_query(node, env={"A": _dense(3, 4)})
+
+
+def case_coo_coo_join():
+    node = fra.Join(
+        eq_pred((0, 0)), jproj(L(0), L(1)), MUL,
+        fra.scan("E", 2), fra.scan("F", 2),
+    )
+    return check_query(
+        fra.Agg(identity_key(2), ADD, node),
+        env={"E": _coo(8, 5, 5), "F": _coo(8, 5, 5)},
+    )
+
+
+def case_coo_predicate():
+    node = fra.Select(
+        SelPred(((0, 1),)), identity_key(2), IDENT,
+        fra.scan("E", 2),
+    )
+    return check_query(node, env={"E": _coo(8, 5, 5)}, schema=SCHEMA)
+
+
+def case_join_drops_class():
+    node = fra.Join(
+        eq_pred((1, 0)), jproj(L(0)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    return check_query(
+        node, env={"A": _dense(3, 4), "B": _dense(4, 6)}, schema=SCHEMA
+    )
+
+
+def case_partial_rjp():
+    # the Σ∘⋈ output keeps only B's second key: A's key is not solvable
+    # from the output, so grads for A take the general partial-RJP path
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(R(1)), MUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    node = fra.Agg(identity_key(1), ADD, join)
+    return check_query(
+        node,
+        env={"A": _dense(3, 4), "B": _dense(4, 6)},
+        schema=SCHEMA,
+        wrt=("A",),
+    )
+
+
+def case_empty_selection():
+    node = fra.Select(
+        SelPred(((0, 99),)), KeyFn((In(1),)), IDENT,
+        fra.scan("A", 2),
+    )
+    return check_query(node, env={"A": _dense(3, 4)}, schema=SCHEMA)
+
+
+def case_stale_stats():
+    return check_query(
+        fra.scan("A", 2),
+        env={"A": _dense(3, 4)},
+        stats={"A": SimpleNamespace(extents=(9, 9))},
+    )
+
+
+def case_non_divisible_shard():
+    q = fra.Query(
+        fra.Agg(KeyFn(()), ADD, fra.scan("A", 2)), inputs=("A",)
+    )
+    return check_query(
+        q, env={"A": _dense(5, 7)}, geometry=MeshGeometry.single(4)
+    )
+
+
+CASES = {
+    name[len("case_"):]: fn
+    for name, fn in sorted(globals().items())
+    if name.startswith("case_")
+}
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden(name):
+    report = CASES[name]()
+    got = report.render() + "\n"
+    path = GOLDEN / f"{name}.txt"
+    if os.environ.get("REGEN_GOLDEN"):
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(got)
+    assert path.exists(), f"golden file missing; REGEN_GOLDEN=1 to create: {path}"
+    assert got == path.read_text()
+
+
+def test_every_malformed_case_is_caught_with_a_node_path():
+    """The acceptance bar: every malformed golden query produces at least
+    one error diagnostic, and every diagnostic carries a node path."""
+    warning_only = {
+        "dtype_promotion", "partial_rjp", "empty_selection",
+        "stale_stats", "non_divisible_shard",
+    }
+    for name, fn in CASES.items():
+        report = fn()
+        assert report.diagnostics, name
+        assert all(d.node_path for d in report.diagnostics), name
+        if name in warning_only:
+            assert report.ok, name
+        else:
+            assert not report.ok, name
+
+
+def test_db_check_and_validation_error_round_trip():
+    """db.check surfaces the same report the validate stage raises."""
+    import jax.numpy as jnp
+
+    db = repro.Database()
+    db.put("A", jnp.zeros((3, 4)), keys=("row", "col"))
+    db.put("B", jnp.zeros((5, 6)), keys=("row", "col"))
+    join = fra.Join(
+        eq_pred((1, 0)), jproj(L(0), L(1), R(1)), MATMUL,
+        fra.scan("A", 2), fra.scan("B", 2),
+    )
+    q = fra.Query(fra.Agg(project_key(0, 2), ADD, join), inputs=("A", "B"))
+    report = db.check(q)
+    assert not report.ok
+    assert report.codes() == ("join-extent-mismatch",)
+    # catalog key names flow into the provenance labels
+    (d,) = report.errors
+    assert "A.col" in d.message and "B.row" in d.message
+    with pytest.raises(ValidationError) as ei:
+        db.query(q).forward()
+    assert ei.value.report.codes() == report.codes()
+    # explain renders the diagnostics without raising
+    assert "join-extent-mismatch" in db.explain(q)

@@ -35,7 +35,7 @@ from repro.core.keys import (
     EMPTY_KEY, TRUE, L, eq_pred, identity_key, jproj,
 )
 from repro.core.planner import plan_waves, _rel_bytes
-from repro.core.relation import CooRelation, DenseRelation
+from repro.core.relation import COO_PAD_KEY, CooRelation, DenseRelation
 from repro.relational.gcn import partitioned_edges
 
 ATOL = 1e-5
@@ -467,3 +467,96 @@ def test_const_data_relations_stream_when_only_params_are_wrt():
         np.asarray(l0.data), np.asarray(l1.data), atol=ATOL
     )
     _grad_close(g0, g1)
+
+
+# ---------------------------------------------------------------------------
+# static wave certification (repro.analysis.certify) — the oocore lane
+# asserts the certifier's independent re-derivation of plan_waves
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_logreg_plan_certifies():
+    """The certifier re-derives wave soundness for a streamed plan:
+    boundary coverage, budget sizing, and grad derivability — proven off
+    the plan record, not observed from an execution."""
+    from repro.analysis import certify
+
+    db = _logreg_fill(repro.Database(memory_budget=_logreg_bytes() * 0.7))
+    env = {n: db.get(n) for n in ("Rx", "Ry", "theta")}  # before spill
+    h = _logreg_handle(db)
+    h.step()
+    assert isinstance(h.last, StreamedCompiled)
+    cert = certify(h.last, env, query=h.query, wrt=("theta",))
+    assert cert.kind == "streamed"
+    assert cert.waves["boundaries_ok"] and cert.waves["budget_ok"]
+    assert cert.waves["num_waves"] == h.last.num_waves == 2
+    assert cert.waves["max_wave_bytes"] <= cert.waves["budget"]
+    assert cert.ok
+    assert cert.grad is not None and cert.grad["full_rjp"]
+    assert "waves: ok" in cert.render()
+
+
+def test_streamed_gcn_plan_certifies_owner_alignment():
+    """Owner-partitioned COO streams certify end to end: the wave cuts
+    never straddle an owner run, and the edge relation's shard offsets
+    are consistent with its owner column."""
+    from repro.analysis import certify
+
+    n = 60
+    db0 = _gcn_fill(repro.Database(), n=n)
+    total = _rel_bytes(db0.get("Edge")) + _rel_bytes(db0.get("Node"))
+    db = _gcn_fill(repro.Database(memory_budget=total / 3), n=n)
+    env = {"Edge": db.get("Edge"), "Node": db.get("Node")}
+    h = db.query(_gcn_query(n))
+    h.step(wrt=("Edge", "Node"))
+    assert h.last.plan.owner_aligned
+    cert = certify(h.last, env)
+    assert cert.ok
+    assert cert.waves["owner_aligned_ok"]
+    assert cert.coo["relations"]["Edge"]["ok"]
+
+
+def test_wave_certifier_rejects_tampered_plans():
+    """Negative control: the certifier is an independent checker, so a
+    corrupted plan record must fail it — non-covering boundaries, a cut
+    through an owner run, and an over-budget wave count all flag."""
+    import dataclasses
+    from types import SimpleNamespace
+
+    from repro.analysis.certify import _certify_waves
+
+    db = _logreg_fill(repro.Database(memory_budget=_logreg_bytes() * 0.7))
+    env = {n: db.get(n) for n in ("Rx", "Ry", "theta")}
+    h = _logreg_handle(db)
+    h.step()
+    plan = h.last.plan
+    assert _certify_waves(h.last, env)["ok"]  # sanity: genuine plan passes
+
+    short = dataclasses.replace(plan, boundaries=plan.boundaries[:-1] + (63,))
+    assert not _certify_waves(SimpleNamespace(plan=short), env)["boundaries_ok"]
+
+    crowded = dataclasses.replace(plan, num_waves=1, boundaries=(0, 64))
+    assert not _certify_waves(SimpleNamespace(plan=crowded), env)["budget_ok"]
+
+    # owner-run straddle: a GCN edge plan with a cut moved off its
+    # owner-aligned snap point
+    n = 60
+    db0 = _gcn_fill(repro.Database(), n=n)
+    total = _rel_bytes(db0.get("Edge")) + _rel_bytes(db0.get("Node"))
+    db2 = _gcn_fill(repro.Database(memory_budget=total / 3), n=n)
+    env2 = {"Edge": db2.get("Edge"), "Node": db2.get("Node")}
+    h2 = db2.query(_gcn_query(n))
+    h2.step(wrt=("Edge", "Node"))
+    plan2 = h2.last.plan
+    owners = np.asarray(env2["Edge"].keys)[:, env2["Edge"].owner_dim]
+    cut = None
+    for c in range(1, owners.shape[0] - 1):
+        if owners[c - 1] == owners[c] != COO_PAD_KEY:
+            cut = c
+            break
+    assert cut is not None
+    bad = dataclasses.replace(
+        plan2, boundaries=(0, cut, int(owners.shape[0])), num_waves=2
+    )
+    res = _certify_waves(SimpleNamespace(plan=bad), env2)
+    assert not res["owner_aligned_ok"]

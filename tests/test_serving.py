@@ -8,11 +8,11 @@ compacts to a smaller bucket), correctness against a solo-served
 oracle, per-tenant model versions + hot swap through the catalog, load
 shedding (queue-full and deadline), the serving edge cases (oversized /
 unbucketed / zero-length requests), the unified ``db.counters()`` tree,
-the one-PR deprecation shims, and the ``_PlacedParamsCache`` fix."""
+EOS early stop, the removal of the pre-unification telemetry shims,
+and the ``_PlacedParamsCache`` fix."""
 
 import asyncio
 import gc
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -385,29 +385,56 @@ def test_counters_tree_shape_and_snapshot_semantics():
 
 
 # ---------------------------------------------------------------------------
-# one-PR deprecation shims
+# EOS early stop
 # ---------------------------------------------------------------------------
 
 
-def test_batch_server_shim_warns_and_still_serves():
-    with pytest.warns(DeprecationWarning, match="db.endpoint"):
-        srv = repro.BatchServer(_TinyLM(), cache_len=16, buckets=[(2, 8)])
-    logits, _ = srv.prefill(
-        jnp.asarray(1.0), {"tokens": jnp.zeros((1, 8), jnp.int32)}
-    )
-    assert logits.shape == (1, 1, V)
-    with pytest.warns(DeprecationWarning, match="counters"):
-        assert srv.cache_stats["misses"] == 1
-    with pytest.warns(DeprecationWarning, match="counters"):
-        srv.spill_stats
+def test_eos_token_releases_slot_early_with_identical_prefix():
+    budget = 8
+    p = _prompts(1)[0]
+    db0, ep0 = _endpoint()
+    base = asyncio.run(ep0.submit(p, max_new_tokens=budget))
+    base_steps = db0.counters()["serve"]["decode"]["steps"]
+    # pick a mid-sequence token as EOS so the stop is genuinely early
+    eos = int(base.token_ids[2])
+    k = list(base.token_ids).index(eos)  # first occurrence
+
+    db, ep = _endpoint(eos_token=eos)
+    out = asyncio.run(ep.submit(p, max_new_tokens=budget))
+    # identical prefix up to and including the EOS token, then stop
+    np.testing.assert_array_equal(out.token_ids, base.token_ids[: k + 1])
+    assert len(out.token_ids) < budget
+    c = db.counters()["serve"]["decode"]
+    assert c["steps"] < base_steps
+    assert c["eos_stops"] == 1
+    assert c["slot_releases"] == 1
 
 
-def test_session_stats_shims_warn_and_delegate():
+def test_eos_absent_decodes_full_budget():
+    p = _prompts(1)[0]
+    db0, ep0 = _endpoint()
+    base = asyncio.run(ep0.submit(p, max_new_tokens=4))
+    db, ep = _endpoint(eos_token=V + 1)  # never emitted
+    out = asyncio.run(ep.submit(p, max_new_tokens=4))
+    np.testing.assert_array_equal(out.token_ids, base.token_ids)
+    assert db.counters()["serve"]["decode"]["eos_stops"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the pre-unification telemetry shims are gone
+# ---------------------------------------------------------------------------
+
+
+def test_pre_unification_shims_are_gone():
     db = repro.Database()
-    with pytest.warns(DeprecationWarning, match="counters"):
-        assert db.cache_stats == db.counters()["cache"]
-    with pytest.warns(DeprecationWarning, match="counters"):
-        assert db.spill_stats == db.counters()["spill"]
+    assert not hasattr(db, "cache_stats")
+    assert not hasattr(db, "spill_stats")
+    with pytest.raises(AttributeError):
+        repro.BatchServer
+    from repro.core.engine import Compiled, StreamedCompiled
+
+    assert not hasattr(Compiled, "reshard_stats")
+    assert not hasattr(StreamedCompiled, "reshard_stats")
 
 
 # ---------------------------------------------------------------------------

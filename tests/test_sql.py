@@ -281,3 +281,44 @@ def test_db_sql_matmul_matches_fra_equivalent():
             np.asarray(g_fra[name].data),
             rtol=1e-5,
         )
+
+
+# ---------------------------------------------------------------------------
+# structured diagnostics on the error paths
+# ---------------------------------------------------------------------------
+
+
+def test_sql_errors_carry_structured_diagnostics():
+    from repro.analysis.diagnostics import Diagnostic
+
+    with pytest.raises(SQLError, match="unknown relation") as ei:
+        compile_sql("SELECT SUM(Ghost.val) FROM Ghost", SCHEMA)
+    d = ei.value.diagnostic
+    assert isinstance(d, Diagnostic)
+    assert d.severity == "error" and d.code == "unknown-relation"
+    assert "stmt[0]" in d.node_path
+    assert "Rx" in d.hint  # hint lists the known relations
+    # str(err) renders the node path and hint for except-and-print callers
+    assert "stmt[0]" in str(ei.value) and "hint" in str(ei.value)
+
+
+def test_sql_diagnostic_names_the_offending_view_statement():
+    bad = """
+    mm := SELECT Rx.row, SUM(multiply(Rx.val, theta.val))
+          FROM Rx, theta WHERE Rx.col = theta.col GROUP BY Rx.row;
+    SELECT SUM(mm.val) FROM mm GROUP BY mm.nope
+    """
+    with pytest.raises(SQLError) as ei:
+        compile_sql(bad, SCHEMA)
+    d = ei.value.diagnostic
+    assert d.node_path == "stmt[1]"       # the failing SELECT, not the view
+    assert d.code == "group-by-mismatch"
+    assert d.hint
+
+
+def test_sql_key_as_value_diagnostic():
+    with pytest.raises(SQLError, match="is a key, not a value") as ei:
+        compile_sql("SELECT Rx.row, SUM(Rx.col) FROM Rx GROUP BY Rx.row",
+                    SCHEMA)
+    assert ei.value.diagnostic.code == "key-as-value"
+    assert ei.value.diagnostic.node_path == "stmt[0]"

@@ -1,0 +1,366 @@
+#!/usr/bin/env python3
+"""Engine-invariant linter: AST checks for repo rules that hold the
+compiler/engine contract together but that no unit test can pin down
+file-by-file. Stdlib only — runs in the CI ``lint`` lane and from the
+command line:
+
+    python tools/lint_invariants.py [--root PATH]
+
+Rules (each prints ``file:line: [rule] message`` and exits non-zero):
+
+  dispatch-pairing   every logical op in ``DISPATCH_OPS`` registers all
+                     four tiers (pallas/interpret/ref/jnp) in
+                     core/kernels.py, and every Pallas kernel package
+                     (src/repro/kernels/*/ with an ops.py) pairs its
+                     forward with a ``jax.custom_vjp`` + ``defvjp`` and
+                     ships a ``ref.py`` oracle — the dispatch registry's
+                     interchangeability contract (docs/kernels.md).
+  cache-key          the lowering-cache signature builders in
+                     core/engine.py (``_rel_signature`` /
+                     ``env_signature`` / ``_stats_key``) return hashable
+                     shapes: no dict/list/set at the top of a return —
+                     an unhashable key silently breaks Lowered reuse.
+  jit-scope          ``jax.jit`` in src/repro/core + src/repro/serving
+                     appears only in the engine/session/serving-step
+                     modules that own executables. A stray jit anywhere
+                     else bypasses the session's compile counters and
+                     the planner's in_shardings.
+  planner-pure       core/planner.py and core/rewrite.py never import
+                     ``jax.numpy`` — cost models and algebraic rewrites
+                     run at plan time on python numbers; a jnp import
+                     would trace (and device-commit) inside planning.
+  task-retention     every asyncio ``create_task`` call in serving/ is
+                     retained (assigned, not fire-and-forget) and named
+                     — an unreferenced task is garbage-collected
+                     mid-flight and swallows its exceptions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from typing import List, NamedTuple
+
+DISPATCH_TIERS = ("pallas", "interpret", "ref", "jnp")
+
+# modules allowed to build jitted executables (rule: jit-scope)
+JIT_ALLOWLIST = {
+    "core/engine.py",      # the staged executor
+    "core/session.py",     # session-owned executables
+    "serving/serve.py",    # prefill/decode step builders
+    "serving/service.py",  # endpoint fallback jit (mesh-less path)
+}
+
+# lowering-cache signature builders (rule: cache-key)
+CACHE_KEY_FUNCS = ("_rel_signature", "env_signature", "_stats_key")
+
+UNHASHABLE_NODES = (
+    ast.Dict, ast.List, ast.Set, ast.DictComp, ast.ListComp, ast.SetComp,
+)
+
+
+class Violation(NamedTuple):
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _parse(path: Path) -> ast.Module:
+    return ast.parse(path.read_text(), filename=str(path))
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Attribute)
+        and node.attr == "jit"
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "jax"
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch-pairing
+# ---------------------------------------------------------------------------
+
+
+def check_dispatch_pairing(src: Path) -> List[Violation]:
+    out: List[Violation] = []
+    kern = src / "core" / "kernels.py"
+    if kern.exists():
+        tree = _parse(kern)
+        ops: List[str] = []
+        ops_line = 1
+        registered = set()
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, (ast.Assign, ast.AnnAssign))
+                and any(
+                    isinstance(t, ast.Name) and t.id == "DISPATCH_OPS"
+                    for t in (
+                        node.targets
+                        if isinstance(node, ast.Assign)
+                        else [node.target]
+                    )
+                )
+                and node.value is not None
+            ):
+                try:
+                    ops = list(ast.literal_eval(node.value))
+                    ops_line = node.lineno
+                except ValueError:
+                    out.append(Violation(
+                        str(kern), node.lineno, "dispatch-pairing",
+                        "DISPATCH_OPS must be a literal tuple of op names",
+                    ))
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "register_impl"
+                and len(node.args) >= 2
+                and all(
+                    isinstance(a, ast.Constant) for a in node.args[:2]
+                )
+            ):
+                registered.add((node.args[0].value, node.args[1].value))
+        for op in ops:
+            missing = [
+                t for t in DISPATCH_TIERS if (op, t) not in registered
+            ]
+            if missing:
+                out.append(Violation(
+                    str(kern), ops_line, "dispatch-pairing",
+                    f"op {op!r} has no registered {'/'.join(missing)} "
+                    "tier(s); every DISPATCH_OPS entry needs all of "
+                    f"{'/'.join(DISPATCH_TIERS)}",
+                ))
+
+    kdir = src / "kernels"
+    if kdir.is_dir():
+        for ops_py in sorted(kdir.glob("*/ops.py")):
+            tree = _parse(ops_py)
+            names = {
+                n.attr if isinstance(n, ast.Attribute) else getattr(n, "id", "")
+                for n in ast.walk(tree)
+                if isinstance(n, (ast.Attribute, ast.Name))
+            }
+            if "custom_vjp" not in names:
+                out.append(Violation(
+                    str(ops_py), 1, "dispatch-pairing",
+                    "kernel ops.py has no jax.custom_vjp — the Pallas "
+                    "forward must pair with an explicit VJP",
+                ))
+            if "defvjp" not in names:
+                out.append(Violation(
+                    str(ops_py), 1, "dispatch-pairing",
+                    "kernel ops.py never calls .defvjp(fwd, bwd)",
+                ))
+            if not (ops_py.parent / "ref.py").exists():
+                out.append(Violation(
+                    str(ops_py.parent), 1, "dispatch-pairing",
+                    "kernel package has no ref.py oracle for the "
+                    "ref dispatch tier",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache-key
+# ---------------------------------------------------------------------------
+
+
+def check_cache_key(src: Path) -> List[Violation]:
+    out: List[Violation] = []
+    eng = src / "core" / "engine.py"
+    if not eng.exists():
+        return out
+    tree = _parse(eng)
+    found = set()
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.FunctionDef)
+            and node.name in CACHE_KEY_FUNCS
+        ):
+            found.add(node.name)
+            for ret in ast.walk(node):
+                if (
+                    isinstance(ret, ast.Return)
+                    and isinstance(ret.value, UNHASHABLE_NODES)
+                ):
+                    out.append(Violation(
+                        str(eng), ret.lineno, "cache-key",
+                        f"{node.name} returns an unhashable "
+                        f"{type(ret.value).__name__.lower()} — the "
+                        "lowering cache keys on this value",
+                    ))
+    for name in CACHE_KEY_FUNCS:
+        if name not in found:
+            out.append(Violation(
+                str(eng), 1, "cache-key",
+                f"signature builder {name} not found — if it moved, "
+                "update CACHE_KEY_FUNCS in tools/lint_invariants.py",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# jit-scope
+# ---------------------------------------------------------------------------
+
+
+def check_jit_scope(src: Path) -> List[Violation]:
+    out: List[Violation] = []
+    for sub in ("core", "serving"):
+        d = src / sub
+        if not d.is_dir():
+            continue
+        for path in sorted(d.glob("*.py")):
+            rel = f"{sub}/{path.name}"
+            if rel in JIT_ALLOWLIST:
+                continue
+            tree = _parse(path)
+            for node in ast.walk(tree):
+                if _is_jax_jit(node):
+                    out.append(Violation(
+                        str(path), node.lineno, "jit-scope",
+                        "jax.jit outside the executable-owning modules "
+                        f"({', '.join(sorted(JIT_ALLOWLIST))}) bypasses "
+                        "the session's compile counters and plans",
+                    ))
+                if (
+                    isinstance(node, ast.ImportFrom)
+                    and node.module == "jax"
+                    and any(a.name == "jit" for a in node.names)
+                ):
+                    out.append(Violation(
+                        str(path), node.lineno, "jit-scope",
+                        "from jax import jit outside the "
+                        "executable-owning modules",
+                    ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# planner-pure
+# ---------------------------------------------------------------------------
+
+
+def check_planner_pure(src: Path) -> List[Violation]:
+    out: List[Violation] = []
+    for rel in ("core/planner.py", "core/rewrite.py"):
+        path = src / rel
+        if not path.exists():
+            continue
+        tree = _parse(path)
+        for node in ast.walk(tree):
+            bad_line = None
+            if isinstance(node, ast.Import) and any(
+                a.name == "jax.numpy" for a in node.names
+            ):
+                bad_line = node.lineno
+            if isinstance(node, ast.ImportFrom) and (
+                node.module == "jax.numpy"
+                or (
+                    node.module == "jax"
+                    and any(a.name == "numpy" for a in node.names)
+                )
+            ):
+                bad_line = node.lineno
+            if bad_line is not None:
+                out.append(Violation(
+                    str(path), bad_line, "planner-pure",
+                    "jax.numpy import in plan-time code — cost models "
+                    "and rewrites must stay off the device (python "
+                    "numbers only)",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# task-retention
+# ---------------------------------------------------------------------------
+
+
+def check_task_retention(src: Path) -> List[Violation]:
+    out: List[Violation] = []
+    d = src / "serving"
+    if not d.is_dir():
+        return out
+    for path in sorted(d.glob("*.py")):
+        tree = _parse(path)
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                call = (
+                    child.value
+                    if isinstance(child, (ast.Expr, ast.Assign, ast.Return))
+                    else child
+                )
+                if not (
+                    isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "create_task"
+                ):
+                    continue
+                if isinstance(child, ast.Expr):
+                    out.append(Violation(
+                        str(path), call.lineno, "task-retention",
+                        "fire-and-forget create_task: the task can be "
+                        "garbage-collected mid-flight and its "
+                        "exceptions vanish — assign it",
+                    ))
+                if not any(k.arg == "name" for k in call.keywords):
+                    out.append(Violation(
+                        str(path), call.lineno, "task-retention",
+                        "create_task without name=: unnamed scheduler "
+                        "tasks are undebuggable in asyncio dumps",
+                    ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+ALL_CHECKS = (
+    check_dispatch_pairing,
+    check_cache_key,
+    check_jit_scope,
+    check_planner_pure,
+    check_task_retention,
+)
+
+
+def run(root: Path) -> List[Violation]:
+    src = root / "src" / "repro"
+    violations: List[Violation] = []
+    for check in ALL_CHECKS:
+        violations.extend(check(src))
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repo root (contains src/repro); default: this checkout",
+    )
+    args = ap.parse_args(argv)
+    violations = run(args.root)
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"{len(violations)} invariant violation(s)")
+        return 1
+    print("engine invariants ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
