@@ -14,11 +14,18 @@ Three layers, all ahead of (or independent of) execution:
   divisibility, COO owner-partition soundness, wave soundness, and
   partial-RJP grad derivability, proven from the plan records rather
   than observed from runtime counters.
+- ``kernelcheck``: static certification of the kernel dispatch registry
+  against the packages' declared ``KernelContract``s — grid/write-race
+  soundness of the Pallas BlockSpecs, VJP tier pairing, and dispatch-
+  predicate determinism; ``certify_kernels`` proves exactly the sites a
+  compiled plan resolved, ``certify_registry`` sweeps the whole registry
+  (the CI lint lane runs ``python -m repro.analysis.kernelcheck``).
 """
 
 from .diagnostics import CheckReport, Diagnostic
 from .typecheck import ValidationError, check_query
-from .certify import Certificate, certify
+from .certify import Certificate, certify, certify_kernels
+from .kernelcheck import certify_registry
 
 __all__ = [
     "CheckReport",
@@ -27,4 +34,6 @@ __all__ = [
     "check_query",
     "Certificate",
     "certify",
+    "certify_kernels",
+    "certify_registry",
 ]

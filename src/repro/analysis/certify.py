@@ -25,6 +25,10 @@ emits a :class:`Certificate` asserting, section by section:
   per join side, ahead of compiling the gradient — ``full_rjp`` is False
   when some wrt input sits below a join whose side key is not solvable
   from its output key (the general partial-RJP fallback).
+- ``kernels``: kernel-contract certification of every dispatch site the
+  plan resolved (``certify_kernels`` — grid/write-race soundness, VJP
+  pairing, predicate determinism; see ``analysis.kernelcheck``), cached
+  on the underlying ``Lowered``.
 
 The certificate is machine-readable (``to_dict``) and human-renderable
 (``render``); the tier1-spmd / tier1-oocore CI lanes assert ``ok``.
@@ -53,6 +57,7 @@ class Certificate:
     coo: Dict[str, object] = field(default_factory=dict)
     waves: Optional[Dict[str, object]] = None
     grad: Optional[Dict[str, object]] = None
+    kernels: Optional[Dict[str, object]] = None
 
     @property
     def zero_unplanned_reshard(self) -> bool:
@@ -67,6 +72,8 @@ class Certificate:
         ]
         if self.waves is not None:
             parts.append(self.waves.get("ok", False))
+        if self.kernels is not None:
+            parts.append(self.kernels.get("ok", True))
         return all(bool(p) for p in parts)
 
     def to_dict(self) -> Dict[str, object]:
@@ -78,6 +85,7 @@ class Certificate:
             "coo": self.coo,
             "waves": self.waves,
             "grad": self.grad,
+            "kernels": self.kernels,
         }
 
     def render(self) -> str:
@@ -113,6 +121,15 @@ class Certificate:
             )
             for jp, rec in sorted(self.grad.get("joins", {}).items()):
                 lines.append(f"    {jp}: {rec}")
+        if self.kernels is not None:
+            k = self.kernels
+            lines.append(
+                f"  kernels: {'ok' if k.get('ok') else 'VIOLATED'} "
+                f"({k.get('sites', 0)} dispatch site(s), "
+                f"{k.get('errors', 0)} error(s))"
+            )
+            for code in k.get("codes", []):
+                lines.append(f"    {code}")
         return "\n".join(lines)
 
 
@@ -374,6 +391,32 @@ def certify_grad(query, wrt: Tuple[str, ...]) -> Dict[str, object]:
     return {"full_rjp": full, "joins": joins}
 
 
+def certify_kernels(compiled, *, recheck: bool = False):
+    """Kernel-contract certification of the dispatch sites one compiled
+    plan resolved (re-exported from :mod:`repro.analysis.kernelcheck`):
+    grid/write-race soundness at the recorded shapes, VJP pairing,
+    predicate determinism + resolution replay. Returns a
+    :class:`~repro.analysis.diagnostics.CheckReport`."""
+    from .kernelcheck import certify_kernels as _ck
+
+    return _ck(compiled, recheck=recheck)
+
+
+def _kernels_section(compiled) -> Dict[str, object]:
+    from .kernelcheck import _lowered_of
+    from .kernelcheck import certify_kernels as _ck
+
+    report = _ck(compiled)
+    resolutions = getattr(_lowered_of(compiled), "resolutions", {})
+    return {
+        "ok": report.ok,
+        "sites": len(getattr(resolutions, "sites", ())),
+        "errors": len(report.errors),
+        "warnings": len(report.warnings),
+        "codes": sorted(set(report.codes())),
+    }
+
+
 def certify(
     compiled,
     env: Dict[str, object],
@@ -393,9 +436,10 @@ def certify(
     grad = None
     if query is not None:
         grad = certify_grad(query, wrt or getattr(query, "inputs", ()))
+    kernels_section = _kernels_section(compiled)
 
     if isinstance(compiled, StreamedCompiled):
-        cert = Certificate(kind="streamed", grad=grad)
+        cert = Certificate(kind="streamed", grad=grad, kernels=kernels_section)
         cert.waves = _certify_waves(compiled, env)
         cert.coo = _certify_coo(env)
         inner = getattr(compiled, "_inner", None)
@@ -417,7 +461,7 @@ def certify(
     if not isinstance(compiled, Compiled):
         raise TypeError(f"cannot certify {type(compiled).__name__}")
 
-    cert = Certificate(kind="in-core", grad=grad)
+    cert = Certificate(kind="in-core", grad=grad, kernels=kernels_section)
     if compiled.mesh is not None:
         have = committed if committed is not None else _committed_layouts(env)
         cert.reshard = _certify_reshard(compiled, have)

@@ -102,11 +102,16 @@ def _norm_pairs(pred: JoinPred):
 # ---------------------------------------------------------------------------
 
 
-def _note(resolutions: Optional[Dict], op: str, site: str, impl) -> None:
+def _note(
+    resolutions: Optional[Dict], op: str, site: str, impl, info: Optional[Dict] = None
+) -> None:
     """Record a dispatch decision for diagnostics (Compiled.resolutions).
     Distinct sites that share a shape signature get ordinal suffixes
     (``op[site]#2`` …) so the record counts every decision, not every
-    distinct shape."""
+    distinct shape. When ``resolutions`` is a ``kernels.ResolutionLog``
+    (the engine's lowering walk) the site-info dict is snapshotted too,
+    so ``analysis.kernelcheck`` can replay the resolution and prove it
+    stable across retraces."""
     if resolutions is None:
         return
     key = f"{op}[{site}]"
@@ -116,6 +121,8 @@ def _note(resolutions: Optional[Dict], op: str, site: str, impl) -> None:
             i += 1
         key = f"{key}#{i}"
     resolutions[key] = impl.tier
+    if info is not None and hasattr(resolutions, "record"):
+        resolutions.record(key, op, site, impl.tier, dict(info))
 
 
 def _dispatched_matmul_join(
@@ -172,7 +179,7 @@ def _dispatched_matmul_join(
     ct = jnp.result_type(lrel.data, rrel.data)
     info = {"m": rows, "k": inner, "n": cols, "dtype": ct}
     impl = kernels.resolve_impl("blocked_matmul", info, dispatch)
-    _note(resolutions, "blocked_matmul", f"m={rows},k={inner},n={cols}", impl)
+    _note(resolutions, "blocked_matmul", f"m={rows},k={inner},n={cols}", impl, info)
     if impl.tier == "jnp":
         return None                  # the einsum below IS the jnp tier
 
@@ -468,7 +475,7 @@ def _dispatched_gather(
     d = math.prod(chunk)
     info = {"rows": e, "num_rows": n, "dim": d, "dtype": dense.data.dtype}
     impl = kernels.resolve_impl("gather_join", info, dispatch)
-    _note(resolutions, "gather_join", f"E={e},N={n},D={d}", impl)
+    _note(resolutions, "gather_join", f"E={e},N={n},D={d}", impl, info)
     table2 = dense.data.reshape(n, d)
     return impl.fn(table2, rows).reshape((e,) + chunk)
 
@@ -741,7 +748,7 @@ def _execute_graph(
             "dtype": rel.values.dtype,
         }
         impl = kernels.resolve_impl("segment_sum", info, dispatch)
-        _note(resolutions, "segment_sum", f"E={rel.nnz},D={d},S={num}", impl)
+        _note(resolutions, "segment_sum", f"E={rel.nnz},D={d},S={num}", impl, info)
         if impl.tier == "jnp":
             summed = jax.ops.segment_sum(rel.values, flat, num_segments=num)
         else:

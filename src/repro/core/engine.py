@@ -522,8 +522,14 @@ class Lowered:
         self.abstract_seed = abstract_seed
         #: pytree of ShapeDtypeStruct-leaved relations: the program output.
         self.out_shape = out_shape
-        #: op[site] → tier decisions recorded during the lowering walk.
+        #: op[site] → tier decisions recorded during the lowering walk
+        #: (a kernels.ResolutionLog: the dict plus per-site SiteRecords).
         self.resolutions = resolutions
+        #: analysis.kernelcheck.certify_kernels caches its CheckReport
+        #: here — the Lowered is already cached per (sig, dispatch,
+        #: rewrite) key, so kernel certification is computed at most once
+        #: per lowering and never on the execution hot path.
+        self._kernel_report = None
         #: LRU-bounded: a Compiled holds an XLA executable, and callers
         #: that churn cache keys (committed layouts, stats buckets) must
         #: not accrete executables forever. Evicted entries simply
@@ -1166,7 +1172,10 @@ class RAEngine:
             program, report = _rewrite.rewrite_program(
                 self.program, abstract_env, stats=stats, rules=rules
             )
-        resolutions: Dict[str, str] = {}
+        # a ResolutionLog (not a plain dict) so each dispatch decision
+        # carries its site-info snapshot — analysis.kernelcheck replays
+        # resolve_impl on the snapshots to certify the decisions stable
+        resolutions: Dict[str, str] = kernels.ResolutionLog()
         out_shape = jax.eval_shape(
             functools.partial(
                 self._execute,

@@ -31,7 +31,7 @@ See docs/kernels.md for the authoring guide and the registry contract.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -103,7 +103,7 @@ def register_unary(
 ) -> UnaryKernel:
     if vjp is None:
         # Appendix A: chunk-kernel derivatives via conventional auto-diff.
-        def vjp(g, x, _fn=fn):
+        def vjp(g, x, _fn=fn):  # type: ignore[no-redef]
             _, pull = jax.vjp(_fn, x)
             return pull(g)[0]
 
@@ -122,12 +122,12 @@ def register_bin(
     chunk_spec: Optional[tuple] = None,
 ) -> BinKernel:
     if vjp_l is None:
-        def vjp_l(g, l, r, _fn=fn):
+        def vjp_l(g, l, r, _fn=fn):  # type: ignore[no-redef]
             _, pull = jax.vjp(_fn, l, r)
             return pull(g)[0]
 
     if vjp_r is None:
-        def vjp_r(g, l, r, _fn=fn):
+        def vjp_r(g, l, r, _fn=fn):  # type: ignore[no-redef]
             _, pull = jax.vjp(_fn, l, r)
             return pull(g)[1]
 
@@ -243,7 +243,7 @@ SUM_CHUNK = register_unary(
     linear=True,
     zero_preserving=True,
 )
-SCALE = {}
+SCALE: Dict[float, UnaryKernel] = {}
 
 
 def scale_kernel(c: float) -> UnaryKernel:
@@ -292,8 +292,13 @@ def scale_kernel(c: float) -> UnaryKernel:
 #: logical ops the compiler routes through the registry.
 DISPATCH_OPS: Tuple[str, ...] = ("segment_sum", "blocked_matmul", "gather_join")
 
-#: known tiers, in decreasing specialization order.
-DISPATCH_TIERS: Tuple[str, ...] = ("pallas", "interpret", "ref", "jnp")
+#: known tiers, in decreasing specialization order. ``sanitizer`` is the
+#: instrumented cross-check tier: it replays the kernel's declared grid
+#: model with out-of-bounds / write-race / uninitialized-accumulator
+#: instrumentation (raising SanitizerError) and computes through the ref
+#: oracle — never part of a default table, selected explicitly via
+#: ``make_table("sanitizer")`` by CI and debugging sessions.
+DISPATCH_TIERS: Tuple[str, ...] = ("pallas", "interpret", "sanitizer", "ref", "jnp")
 
 
 class KernelDispatchError(LookupError):
@@ -446,6 +451,349 @@ def resolve_impl(op: str, info: Dict, table: Optional[DispatchTable] = None) -> 
     )
 
 
+# ---------------------------------------------------------------------------
+# Kernel contracts: the statically checkable shape of a Pallas kernel
+#
+# Every kernel package declares a ``CONTRACT`` (a KernelContract) next to
+# its registration: the dtype domain its hardware tiers accept, the f32
+# accumulator it carries, the masking obligations the wrapper discharges
+# (COO_PAD_KEY rows, clamp-and-mask), which dispatch ops its custom VJP
+# re-enters, and — the load-bearing part — a ``grid_model`` mapping a
+# dispatch site-info dict to the exact ``grid`` + BlockSpec index maps the
+# kernel would launch (padding mirrored from the ops.py wrapper).
+#
+# ``analysis.kernelcheck`` interprets the model abstractly (every output
+# block stored by exactly one program instance, all index maps in-bounds,
+# accumulator initialized before use); the ``sanitizer`` dispatch tier
+# interprets the same model concretely at runtime. The vocabulary lives
+# here, not in analysis/, so kernel packages never import the analysis
+# layer.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Interval:
+    """Inclusive integer range for index-map coordinates that are only
+    known as a range statically (scalar-prefetched row ids)."""
+
+    lo: int
+    hi: int
+
+    def __repr__(self) -> str:
+        return f"[{self.lo}..{self.hi}]"
+
+
+#: an index-map coordinate: exact, or an inclusive range.
+Coord = Union[int, Interval]
+
+
+@dataclass(frozen=True)
+class BlockModel:
+    """One operand's BlockSpec, abstractly: the (padded) array shape the
+    kernel addresses, the block shape, and the index map from grid
+    coordinates to block indices (returning ``Coord`` per dim)."""
+
+    name: str
+    array_shape: Tuple[int, ...]
+    block_shape: Tuple[int, ...]
+    index_map: Callable[..., Tuple[Coord, ...]]
+
+    def block_counts(self) -> Tuple[int, ...]:
+        return tuple(
+            -(-a // b) for a, b in zip(self.array_shape, self.block_shape)
+        )
+
+
+@dataclass(frozen=True)
+class AccumModel:
+    """A VMEM scratch accumulator carried across the ``axis`` grid
+    dimension: zeroed when the axis coordinate equals ``init_at``, with
+    the output block stored at the axis' last step (``store="last"``) or
+    at every step (``store="every"``, the scan kernels)."""
+
+    axis: int
+    init_at: int = 0
+    store: str = "last"  # "last" | "every"
+
+
+@dataclass(frozen=True)
+class GridModel:
+    """The launch geometry of one kernel instantiation: grid extents,
+    input/output block models, and the optional accumulator."""
+
+    grid: Tuple[int, ...]
+    inputs: Tuple[BlockModel, ...]
+    output: BlockModel
+    accumulator: Optional[AccumModel] = None
+
+
+@dataclass(frozen=True)
+class VjpPair:
+    """One dispatch op the kernel's custom VJP re-enters at the forward's
+    tier; ``info_map`` translates the forward site info into the backward
+    site's info dict."""
+
+    op: str
+    info_map: Callable[[Dict], Dict]
+
+
+@dataclass(frozen=True)
+class KernelContract:
+    """The statically checkable contract of one kernel package.
+
+    ``dtypes`` is the domain of the hardware (pallas/interpret) tiers —
+    ``"floating"`` or ``"any"``; ``accum_dtype`` names the accumulator
+    dtype the grid model's AccumModel carries; ``masking`` lists the
+    pad-and-mask obligations the ops.py wrapper discharges (prose,
+    rendered in docs/kernels.md); ``vjp`` describes the backward;
+    ``vjp_pairs`` are the dispatch ops it re-enters in-tier;
+    ``grid_model(info, **concrete)`` builds the GridModel for a site
+    (``None`` when the site degenerates, e.g. an empty gather) —
+    ``concrete`` may carry runtime operands (the sanitizer passes actual
+    row ids) to sharpen Interval coordinates into exact ones.
+    """
+
+    op: str
+    dtypes: str
+    accum_dtype: str
+    masking: Tuple[str, ...]
+    vjp: str
+    vjp_pairs: Tuple[VjpPair, ...]
+    grid_model: Callable[..., Optional[GridModel]]
+
+
+#: kernel package module per contract-carrying op. ``ssm_scan`` carries a
+#: contract but no registry entries (the models layer calls it directly).
+_CONTRACT_MODULES: Dict[str, str] = {
+    "segment_sum": "repro.kernels.segsum.ops",
+    "blocked_matmul": "repro.kernels.matmul.ops",
+    "gather_join": "repro.kernels.gather.ops",
+    "ssm_scan": "repro.kernels.ssm_scan.ops",
+}
+
+
+def contract_ops() -> Tuple[str, ...]:
+    """Ops with a declared KernelContract (dispatch ops + ssm_scan)."""
+    return tuple(_CONTRACT_MODULES)
+
+
+def kernel_contract(op: str) -> KernelContract:
+    """The ``CONTRACT`` declared in ``op``'s kernel package (lazy import,
+    matching the lazy impl wrappers below)."""
+    import importlib
+
+    mod = _CONTRACT_MODULES.get(op)
+    if mod is None:
+        raise KeyError(f"no kernel contract for op {op!r}; have {contract_ops()}")
+    return importlib.import_module(mod).CONTRACT
+
+
+# -- grid-model interpretation ----------------------------------------------
+# Shared by the static certifier (analysis/kernelcheck.py wraps violations
+# into node-path Diagnostics) and the sanitizer tier (raises
+# SanitizerError). Index maps are affine in the grid coordinates (the only
+# shape Pallas BlockSpecs take in this repo), which is what makes corner
+# sampling sound for grids too large to enumerate.
+
+#: grids at most this large are enumerated exhaustively (exact coverage /
+#: race counts); larger grids are corner-sampled (bounds + race only).
+GRID_ENUM_CAP: int = 32768
+
+
+class SanitizerError(RuntimeError):
+    """A sanitizer-tier instrumentation check failed. ``kind`` is the
+    violation code, matching the static certifier's diagnostic codes."""
+
+    def __init__(self, kind: str, detail: str):
+        super().__init__(f"[{kind}] {detail}")
+        self.kind = kind
+        self.detail = detail
+
+
+def _grid_coords(grid: Tuple[int, ...], cap: int) -> Tuple[List[Tuple[int, ...]], bool]:
+    import itertools
+
+    total = 1
+    for s in grid:
+        total *= s
+    if total <= cap:
+        pts = list(itertools.product(*(range(s) for s in grid)))
+        return pts, True
+    corners = [
+        sorted({p for p in (0, 1, s - 2, s - 1) if 0 <= p < s}) for s in grid
+    ]
+    return list(itertools.product(*corners)), False
+
+
+def _map_axis_deps(index_map: Callable, grid: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Grid axes the index map depends on, by probing unit moves from the
+    origin (sound for affine maps)."""
+    base = index_map(*(0,) * len(grid))
+    deps = []
+    for ax, size in enumerate(grid):
+        if size <= 1:
+            continue
+        probe = [0] * len(grid)
+        probe[ax] = size - 1
+        if index_map(*probe) != base:
+            deps.append(ax)
+    return tuple(deps)
+
+
+def _coord_range(v: Coord) -> Tuple[int, int]:
+    if isinstance(v, Interval):
+        return v.lo, v.hi
+    return int(v), int(v)
+
+
+def simulate_grid(
+    model: GridModel, cap: int = GRID_ENUM_CAP
+) -> List[Tuple[str, str]]:
+    """Interpret a kernel's grid model and return ``(kind, detail)``
+    violations (empty = sound). Kinds: ``grid-oob-index`` (an input or
+    output block index leaves the padded array), ``grid-race`` (an output
+    block stored by more than one program instance), ``grid-uncovered``
+    (an output block never stored; exhaustive enumeration only),
+    ``grid-reduction-order`` (revisit axes not innermost, so a VMEM
+    accumulator would be clobbered between partial sums), and
+    ``uninit-accumulator`` (accumulated before its zeroing step)."""
+    viols: List[Tuple[str, str]] = []
+    grid = model.grid
+    if any(s <= 0 for s in grid):
+        return viols
+    coords, exhaustive = _grid_coords(grid, cap)
+    acc = model.accumulator
+
+    # revisit axes (grid axes the output map ignores — the reduction /
+    # sweep axes) must be the innermost suffix: the TPU grid executes
+    # sequentially with the last axis fastest, so only a trailing sweep
+    # keeps one output block's partial sums adjacent in time.
+    out_deps = set(_map_axis_deps(model.output.index_map, grid))
+    revisit = [ax for ax in range(len(grid)) if ax not in out_deps and grid[ax] > 1]
+    if revisit != list(range(len(grid) - len(revisit), len(grid))):
+        viols.append((
+            "grid-reduction-order",
+            f"revisit axes {tuple(revisit)} of grid {grid} are not the "
+            f"innermost suffix (output map depends on axes {tuple(sorted(out_deps))})",
+        ))
+    if acc is not None:
+        if acc.init_at != 0:
+            viols.append((
+                "uninit-accumulator",
+                f"accumulator on grid axis {acc.axis} is zeroed at step "
+                f"{acc.init_at}, so steps 0..{acc.init_at - 1} accumulate "
+                "into uninitialized VMEM",
+            ))
+        if not 0 <= acc.axis < len(grid):
+            viols.append((
+                "uninit-accumulator",
+                f"accumulator axis {acc.axis} outside grid {grid}",
+            ))
+            acc = None
+
+    oob_seen = set()
+    stores: Dict[Tuple[int, ...], int] = {}
+    out_counts = model.output.block_counts()
+    for coord in coords:
+        for bm in model.inputs + (model.output,):
+            idx = bm.index_map(*coord)
+            counts = bm.block_counts()
+            if len(idx) != len(counts):
+                if bm.name not in oob_seen:
+                    oob_seen.add(bm.name)
+                    viols.append((
+                        "grid-oob-index",
+                        f"{bm.name}: index map arity {len(idx)} != "
+                        f"array rank {len(counts)}",
+                    ))
+                continue
+            for d, (v, n) in enumerate(zip(idx, counts)):
+                lo, hi = _coord_range(v)
+                if lo < 0 or hi >= n:
+                    key = (bm.name, d)
+                    if key not in oob_seen:
+                        oob_seen.add(key)
+                        viols.append((
+                            "grid-oob-index",
+                            f"{bm.name} dim {d}: block index {v} at grid "
+                            f"point {coord} outside [0, {n}) "
+                            f"(array {bm.array_shape}, block {bm.block_shape})",
+                        ))
+        if acc is None or acc.store == "every":
+            stored = True
+        else:
+            stored = coord[acc.axis] == grid[acc.axis] - 1
+        if stored:
+            oidx = model.output.index_map(*coord)
+            if any(isinstance(v, Interval) for v in oidx):
+                viols.append((
+                    "grid-race",
+                    f"output block index {oidx} at grid point {coord} is "
+                    "not statically exact — cannot prove single-writer",
+                ))
+                continue
+            oidx = tuple(int(v) for v in oidx)
+            stores[oidx] = stores.get(oidx, 0) + 1
+
+    races = sorted(idx for idx, c in stores.items() if c > 1)
+    if races:
+        viols.append((
+            "grid-race",
+            f"{len(races)} output block(s) stored by more than one program "
+            f"instance, e.g. block {races[0]} stored {stores[races[0]]}x",
+        ))
+    if exhaustive:
+        import itertools
+
+        missing = [
+            idx
+            for idx in itertools.product(*(range(n) for n in out_counts))
+            if idx not in stores
+        ]
+        if missing:
+            viols.append((
+                "grid-uncovered",
+                f"{len(missing)} output block(s) never stored, e.g. "
+                f"block {missing[0]} of {out_counts}",
+            ))
+    return viols
+
+
+# -- dispatch-site resolution log --------------------------------------------
+
+
+@dataclass(frozen=True)
+class SiteRecord:
+    """One dispatch decision with enough context to replay it: the
+    ``op[site]`` key, the site-info dict (frozen as sorted items), and
+    the tier that resolved. ``analysis.kernelcheck`` re-runs
+    ``resolve_impl`` on the snapshot and flags any drift — the checked
+    form of the flappy-predicate hazard on KernelImpl."""
+
+    key: str
+    op: str
+    site: str
+    tier: str
+    info: Tuple[Tuple[str, object], ...]
+
+    def info_dict(self) -> Dict:
+        return dict(self.info)
+
+
+class ResolutionLog(Dict[str, str]):
+    """The ``op[site] → tier`` dict the engine exposes as
+    ``Compiled.resolutions``, plus per-site SiteRecords for replay."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.sites: List[SiteRecord] = []
+
+    def record(self, key: str, op: str, site: str, tier: str, info: Dict) -> None:
+        self.sites.append(
+            SiteRecord(key, op, site, tier, tuple(sorted(info.items())))
+        )
+
+
 # -- registered implementations ---------------------------------------------
 # The pallas/interpret/ref fns import the kernel packages lazily so that
 # importing repro.core stays cheap on machines that never leave the jnp
@@ -456,51 +804,51 @@ def _is_float(info: Dict) -> bool:
     return jnp.issubdtype(jnp.dtype(info["dtype"]), jnp.floating)
 
 
-def _segsum_jnp(msg, seg, num_segments):
+def _segsum_jnp(msg: jnp.ndarray, seg: jnp.ndarray, num_segments: int) -> jnp.ndarray:
     return jax.ops.segment_sum(msg, seg, num_segments=num_segments)
 
 
-def _segsum_ref(msg, seg, num_segments):
+def _segsum_ref(msg: jnp.ndarray, seg: jnp.ndarray, num_segments: int) -> jnp.ndarray:
     from repro.kernels.segsum.ref import segment_sum_ref
 
     return segment_sum_ref(msg, seg, num_segments)
 
 
-def _segsum_pallas(msg, seg, num_segments):
+def _segsum_pallas(msg: jnp.ndarray, seg: jnp.ndarray, num_segments: int) -> jnp.ndarray:
     from repro.kernels.segsum.ops import segment_sum
 
     return segment_sum(msg, seg, num_segments, interpret=False)
 
 
-def _segsum_interpret(msg, seg, num_segments):
+def _segsum_interpret(msg: jnp.ndarray, seg: jnp.ndarray, num_segments: int) -> jnp.ndarray:
     from repro.kernels.segsum.ops import segment_sum
 
     return segment_sum(msg, seg, num_segments, interpret=True)
 
 
-def _matmul_jnp(x, y):
+def _matmul_jnp(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return jnp.matmul(x, y)
 
 
-def _matmul_ref(x, y):
+def _matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels.matmul.ref import matmul_ref
 
     return matmul_ref(x, y)
 
 
-def _matmul_pallas(x, y):
+def _matmul_pallas(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels.matmul.ops import blocked_matmul
 
     return blocked_matmul(x, y, interpret=False)
 
 
-def _matmul_interpret(x, y):
+def _matmul_interpret(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels.matmul.ops import blocked_matmul
 
     return blocked_matmul(x, y, interpret=True)
 
 
-def _gather_jnp(table, rows):
+def _gather_jnp(table: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
     # the default lowering IS the masked-gather oracle (one definition of
     # the COO pad-and-mask contract: out-of-range / negative ids gather
     # zero rows — see kernels/gather/ref.py)
@@ -509,22 +857,92 @@ def _gather_jnp(table, rows):
     return gather_rows_ref(table, rows)
 
 
-def _gather_ref(table, rows):
+def _gather_ref(table: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels.gather.ref import gather_rows_ref
 
     return gather_rows_ref(table, rows)
 
 
-def _gather_pallas(table, rows):
+def _gather_pallas(table: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels.gather.ops import gather_rows
 
     return gather_rows(table, rows, interpret=False)
 
 
-def _gather_interpret(table, rows):
+def _gather_interpret(table: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels.gather.ops import gather_rows
 
     return gather_rows(table, rows, interpret=True)
+
+
+# -- sanitizer tier ----------------------------------------------------------
+# Instrumented cross-check impls: on concrete (eager) inputs they replay
+# the contract's grid model with out-of-bounds / write-race /
+# uninitialized-accumulator instrumentation (raising SanitizerError with
+# the same violation codes the static certifier reports) and compute the
+# result through the ref oracle; under tracing (eval_shape / jit) the
+# checks cannot observe values and the impl degrades to the plain oracle.
+
+
+def _is_concrete(*xs: Any) -> bool:
+    return not any(isinstance(x, jax.core.Tracer) for x in xs)
+
+
+def _sanitize_site(op: str, info: Dict, **concrete: Any) -> None:
+    contract = kernel_contract(op)
+    if contract.dtypes == "floating" and not _is_float(info):
+        raise SanitizerError(
+            "dtype-domain",
+            f"{op}: dtype {jnp.dtype(info['dtype'])} outside the "
+            f"contract's floating domain at site {info}",
+        )
+    model = contract.grid_model(info, **concrete)
+    if model is None:
+        return
+    viols = simulate_grid(model)
+    if viols:
+        kind, detail = viols[0]
+        raise SanitizerError(kind, f"{op}: {detail} (site {info})")
+
+
+def _segsum_sanitizer(msg: jnp.ndarray, seg: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    from repro.kernels.segsum.ref import segment_sum_ref
+
+    if _is_concrete(msg, seg):
+        info = {
+            "nnz": msg.shape[0], "dim": msg.shape[1],
+            "num_segments": num_segments, "dtype": msg.dtype,
+        }
+        _sanitize_site("segment_sum", info)
+    return segment_sum_ref(msg, seg, num_segments)
+
+
+def _matmul_sanitizer(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    from repro.kernels.matmul.ref import matmul_ref
+
+    if _is_concrete(x, y):
+        info = {
+            "m": x.shape[0], "k": x.shape[1], "n": y.shape[1],
+            "dtype": jnp.result_type(x, y),
+        }
+        _sanitize_site("blocked_matmul", info)
+    return matmul_ref(x, y)
+
+
+def _gather_sanitizer(table: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    import numpy as np
+
+    from repro.kernels.gather.ref import gather_rows_ref
+
+    if _is_concrete(table, rows):
+        info = {
+            "rows": rows.shape[0], "num_rows": table.shape[0],
+            "dim": table.shape[1], "dtype": table.dtype,
+        }
+        # concrete row ids sharpen the scalar-prefetch Interval into the
+        # exact per-step indices the DMA pipeline would issue
+        _sanitize_site("gather_join", info, rows=np.asarray(rows))
+    return gather_rows_ref(table, rows)
 
 
 # The hardware tiers require float inputs (the Pallas kernels accumulate in
@@ -534,6 +952,7 @@ register_impl(
     "segment_sum", "pallas", _segsum_pallas, backends=("tpu",), predicate=_is_float
 )
 register_impl("segment_sum", "interpret", _segsum_interpret, predicate=_is_float)
+register_impl("segment_sum", "sanitizer", _segsum_sanitizer, predicate=_is_float)
 register_impl("segment_sum", "ref", _segsum_ref)
 register_impl("segment_sum", "jnp", _segsum_jnp)
 
@@ -541,6 +960,7 @@ register_impl(
     "blocked_matmul", "pallas", _matmul_pallas, backends=("tpu",), predicate=_is_float
 )
 register_impl("blocked_matmul", "interpret", _matmul_interpret, predicate=_is_float)
+register_impl("blocked_matmul", "sanitizer", _matmul_sanitizer, predicate=_is_float)
 register_impl("blocked_matmul", "ref", _matmul_ref)
 register_impl("blocked_matmul", "jnp", _matmul_jnp)
 
@@ -551,5 +971,6 @@ register_impl(
     "gather_join", "pallas", _gather_pallas, backends=("tpu",), predicate=_is_float
 )
 register_impl("gather_join", "interpret", _gather_interpret, predicate=_is_float)
+register_impl("gather_join", "sanitizer", _gather_sanitizer, predicate=_is_float)
 register_impl("gather_join", "ref", _gather_ref)
 register_impl("gather_join", "jnp", _gather_jnp)

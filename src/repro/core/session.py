@@ -646,8 +646,13 @@ class Database:
         byte estimates the gate compared), and the tree after. Relations
         and their tracked statistics are sourced from the catalog exactly
         as ``forward``/``grad``/``step`` would source them, so the
-        verdicts shown are the ones a compiled step takes. Purely
-        observational — nothing is lowered, planned or cached."""
+        verdicts shown are the ones a compiled step takes. Observational
+        with one exception: when the typed check is clean the query is
+        *lowered* (never planned or executed) so the kernel certifier
+        (``repro.analysis.kernelcheck``) can prove the exact dispatch
+        sites the plan resolved — the Lowered and its certification
+        report land in the engine's ordinary caches, which a later
+        ``forward``/``grad``/``step`` reuses."""
         if isinstance(q, fra.Node):
             q = fra.Query(
                 q, tuple(sorted({s.name for s in q.table_scans()}))
@@ -683,6 +688,28 @@ class Database:
             lines += ["  " + ln for ln in report.render().splitlines()]
         else:
             lines.append("  (none)")
+        lines.append("kernel certification:")
+        if report.errors:
+            lines.append("  (skipped: typed check failed)")
+        else:
+            from repro.analysis import kernelcheck as _kernelcheck
+
+            eng = _engine.engine_for(q, fuse_join_agg=self.fuse_join_agg)
+            low = eng.lower(
+                env,
+                dispatch=self.dispatch,
+                stats=stats,
+                rewrite=self.rewrite_rules,
+            )
+            kreport = _kernelcheck.certify_kernels(low)
+            sites = len(getattr(low.resolutions, "sites", ()))
+            lines.append(
+                f"  {sites} dispatch site(s): " + kreport.render().splitlines()[0]
+            )
+            if kreport.diagnostics:
+                lines += [
+                    "  " + ln for ln in kreport.render().splitlines()[1:]
+                ]
         return "\n".join(lines)
 
     # -- staged execution (the engine underneath) --------------------------

@@ -19,10 +19,19 @@ different physical tier.
 from __future__ import annotations
 
 import functools
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.kernels import (
+    BlockModel,
+    GridModel,
+    Interval,
+    KernelContract,
+    VjpPair,
+)
 
 from .gather import gather_rows_pallas
 from .ref import gather_rows_ref
@@ -95,3 +104,64 @@ def gather_rows(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _jitted(table, rows.astype(jnp.int32), interpret, use_pallas)
+
+
+# -- contract ----------------------------------------------------------------
+
+
+def _grid_model(
+    info: Dict[str, Any], rows: Optional[Any] = None, **concrete: Any
+) -> Optional[GridModel]:
+    """The scalar-prefetch launch geometry: one program per output row.
+    Statically the table block index is only known to lie in the clamp
+    range ``[0, N)`` (an Interval); the sanitizer passes the concrete
+    ``rows`` to sharpen it into the exact per-step DMA indices."""
+    e, n, d = int(info["rows"]), int(info["num_rows"]), int(info["dim"])
+    if e == 0 or n == 0 or d == 0:
+        return None  # the zero-nnz guard short-circuits before the kernel
+    if rows is not None:
+        import numpy as np_mod
+
+        safe = np_mod.clip(np_mod.asarray(rows), 0, n - 1)
+
+        def table_map(i):
+            return (int(safe[i]), 0)
+    else:
+        span = Interval(0, n - 1)
+
+        def table_map(i):
+            return (span, 0)
+
+    return GridModel(
+        grid=(e,),
+        inputs=(BlockModel("table", (n, d), (1, d), table_map),),
+        output=BlockModel("out", (e, d), (1, d), lambda i: (i, 0)),
+        accumulator=None,
+    )
+
+
+def _vjp_info(info: Dict[str, Any]) -> Dict[str, Any]:
+    # dtable = Σ_e 1[rows_e == r]·g[e] — the segment-sum dispatch op
+    return {
+        "nnz": info["rows"],
+        "dim": info["dim"],
+        "num_segments": info["num_rows"],
+        "dtype": info["dtype"],
+    }
+
+
+#: the statically checkable contract of this package (docs/kernels.md;
+#: proven by analysis.kernelcheck, cross-checked by the sanitizer tier).
+CONTRACT = KernelContract(
+    op="gather_join",
+    dtypes="floating",
+    accum_dtype="none",
+    masking=(
+        "row ids outside [0, N) (COO padding) are clamped before the DMA "
+        "and their output rows zeroed after it",
+        "empty gathers (E = 0) short-circuit to zeros before the kernel",
+    ),
+    vjp="same-tier segment_sum scatter of the cotangent (dispatch op)",
+    vjp_pairs=(VjpPair("segment_sum", _vjp_info),),
+    grid_model=_grid_model,
+)

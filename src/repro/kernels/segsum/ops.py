@@ -16,10 +16,18 @@ its forward Σ through the kernel and still be jax.grad-differentiable.
 from __future__ import annotations
 
 import functools
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.kernels import (
+    AccumModel,
+    BlockModel,
+    GridModel,
+    KernelContract,
+)
 
 from .ref import segment_sum_ref
 from .segsum import segment_sum_pallas
@@ -98,3 +106,46 @@ def segment_sum(
     return _segment_sum(
         msg, seg.astype(jnp.int32), num_segments, bs, be, bd, interpret, use_pallas
     )
+
+
+# -- contract ----------------------------------------------------------------
+
+
+def _grid_model(info: Dict[str, Any], **concrete: Any) -> Optional[GridModel]:
+    """The launch geometry ``_run`` produces for a dispatch site at the
+    default tiles: E padded to ``be``-multiples (pad ids -1), the segment
+    count padded to ``bs``-multiples, edge sweep innermost."""
+    e, d = int(info["nnz"]), int(info["dim"])
+    s = int(info["num_segments"])
+    bs, be, bd = 128, 512, d
+    epad = e + (-e) % be
+    spad = s + (-s) % bs
+    if epad == 0 or spad == 0 or d == 0:
+        return None  # zero-nnz / zero-dim sites are guarded before dispatch
+    return GridModel(
+        grid=(spad // bs, d // bd, epad // be),
+        inputs=(
+            BlockModel("seg", (epad,), (be,), lambda i, j, k: (k,)),
+            BlockModel("msg", (epad, d), (be, bd), lambda i, j, k: (k, j)),
+        ),
+        output=BlockModel("out", (spad, d), (bs, bd), lambda i, j, k: (i, j)),
+        accumulator=AccumModel(axis=2, init_at=0, store="last"),
+    )
+
+
+#: the statically checkable contract of this package (docs/kernels.md;
+#: proven by analysis.kernelcheck, cross-checked by the sanitizer tier).
+CONTRACT = KernelContract(
+    op="segment_sum",
+    dtypes="floating",
+    accum_dtype="float32",
+    masking=(
+        "edges padded to the `be` tile carry segment id -1 (COO_PAD_KEY) "
+        "and match no one-hot row",
+        "segment ids outside [0, num_segments) contribute to no output row",
+        "padded segment rows [num_segments, S') are sliced off on return",
+    ),
+    vjp="gather g[seg] of the cotangent (inline jnp; padding ids get zero)",
+    vjp_pairs=(),
+    grid_model=_grid_model,
+)

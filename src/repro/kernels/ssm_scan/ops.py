@@ -13,9 +13,17 @@ the same 3-passes-per-direction HBM profile as the forward.
 from __future__ import annotations
 
 import functools
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.kernels import (
+    AccumModel,
+    BlockModel,
+    GridModel,
+    KernelContract,
+)
 
 from .ref import ssm_scan_ref
 from .ssm_scan import ssm_scan_pallas
@@ -86,3 +94,55 @@ def _bwd(bt, bc, interpret, use_pallas, res, hbar):
 
 
 ssm_scan.defvjp(_fwd, _bwd)
+
+
+# -- contract ----------------------------------------------------------------
+
+
+def _grid_model(info: Dict[str, Any], **concrete: Any) -> Optional[GridModel]:
+    """The launch geometry ``_run`` produces: tiles shrunk to divisors,
+    time innermost so the (bc, N) running state persists across the time
+    tiles of one (batch, channel-block) program."""
+    bsz = int(info["batch"])
+    s, c, n = int(info["seq"]), int(info["channels"]), int(info["state"])
+    bt, bc = int(info.get("bt", 256)), int(info.get("bc", 8))
+    while s % bt:
+        bt //= 2
+    while c % bc:
+        bc //= 2
+    if bt < 1 or bc < 1 or 0 in (bsz, s, c, n):
+        return None  # ragged shape: the wrapper falls back to the oracle
+    shape = (bsz, s, c, n)
+    block = (1, bt, bc, n)
+
+    def spec(ib, ic, it):
+        return (ib, it, ic, 0)
+
+    return GridModel(
+        grid=(bsz, c // bc, s // bt),
+        inputs=(
+            BlockModel("a", shape, block, spec),
+            BlockModel("b", shape, block, spec),
+        ),
+        output=BlockModel("h", shape, block, spec),
+        # the running state is re-zeroed when a new (batch, channel-block)
+        # program starts; every time tile stores its own output block
+        accumulator=AccumModel(axis=2, init_at=0, store="every"),
+    )
+
+
+#: the statically checkable contract of this package (docs/kernels.md).
+#: ssm_scan is not a dispatch op — the models layer calls it directly —
+#: so the contract has no registry entries, only the grid-model proof.
+CONTRACT = KernelContract(
+    op="ssm_scan",
+    dtypes="floating",
+    accum_dtype="float32",
+    masking=(
+        "tile sizes shrink to divisors of (S, C): no padding; shapes that "
+        "cannot tile fall back to the associative-scan oracle",
+    ),
+    vjp="time-reversed scan of the same kernel (custom VJP)",
+    vjp_pairs=(),
+    grid_model=_grid_model,
+)

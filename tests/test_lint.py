@@ -117,6 +117,49 @@ def test_seeded_missing_tier_detected(tmp_path):
     )
 
 
+def test_seeded_missing_contract_detected(tmp_path):
+    # an ops.py without CONTRACT = KernelContract(...) fires the rule
+    root = _tree(
+        tmp_path,
+        "kernels/badkern/ops.py",
+        "import jax\n\n"
+        "@jax.custom_vjp\n"
+        "def forward(x):\n    return x\n"
+        "forward.defvjp(lambda x: (x, None), lambda r, g: (g,))\n",
+    )
+    (tmp_path / "src" / "repro" / "kernels" / "badkern" / "ref.py").write_text(
+        "def forward(x):\n    return x\n"
+    )
+    vs = [v for v in lint_invariants.run(root) if v.rule == "kernel-contract"]
+    assert any("CONTRACT" in v.message for v in vs)
+    # declaring one silences it
+    root2 = _tree(
+        tmp_path / "ok",
+        "kernels/goodkern/ops.py",
+        "import jax\n"
+        "from repro.core.kernels import KernelContract\n\n"
+        "@jax.custom_vjp\n"
+        "def forward(x):\n    return x\n"
+        "forward.defvjp(lambda x: (x, None), lambda r, g: (g,))\n"
+        'CONTRACT = KernelContract(op="goodkern", dtypes="floating")\n',
+    )
+    ok_dir = tmp_path / "ok" / "src" / "repro" / "kernels" / "goodkern"
+    (ok_dir / "ref.py").write_text("def forward(x):\n    return x\n")
+    assert "kernel-contract" not in _rules(lint_invariants.run(root2))
+
+
+def test_seeded_contract_module_gap_detected(tmp_path):
+    # a DISPATCH_OPS op absent from _CONTRACT_MODULES fires the rule
+    root = _tree(
+        tmp_path,
+        "core/kernels.py",
+        'DISPATCH_OPS = ("segment_sum", "blocked_matmul")\n'
+        '_CONTRACT_MODULES = {"segment_sum": "repro.kernels.segsum.ops"}\n',
+    )
+    vs = [v for v in lint_invariants.run(root) if v.rule == "kernel-contract"]
+    assert any("blocked_matmul" in v.message for v in vs)
+
+
 def test_seeded_unpaired_kernel_forward_detected(tmp_path):
     root = _tree(
         tmp_path,

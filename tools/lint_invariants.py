@@ -9,12 +9,18 @@ command line:
 Rules (each prints ``file:line: [rule] message`` and exits non-zero):
 
   dispatch-pairing   every logical op in ``DISPATCH_OPS`` registers all
-                     four tiers (pallas/interpret/ref/jnp) in
+                     five tiers (pallas/interpret/sanitizer/ref/jnp) in
                      core/kernels.py, and every Pallas kernel package
                      (src/repro/kernels/*/ with an ops.py) pairs its
                      forward with a ``jax.custom_vjp`` + ``defvjp`` and
                      ships a ``ref.py`` oracle — the dispatch registry's
                      interchangeability contract (docs/kernels.md).
+  kernel-contract    every Pallas kernel package's ops.py declares a
+                     module-level ``CONTRACT = KernelContract(...)``,
+                     and ``_CONTRACT_MODULES`` in core/kernels.py names
+                     a contract module for every ``DISPATCH_OPS`` op —
+                     the static certifier (repro.analysis.kernelcheck)
+                     proves grid/VJP/predicate soundness from these.
   cache-key          the lowering-cache signature builders in
                      core/engine.py (``_rel_signature`` /
                      ``env_signature`` / ``_stats_key``) return hashable
@@ -43,7 +49,7 @@ import sys
 from pathlib import Path
 from typing import List, NamedTuple
 
-DISPATCH_TIERS = ("pallas", "interpret", "ref", "jnp")
+DISPATCH_TIERS = ("pallas", "interpret", "sanitizer", "ref", "jnp")
 
 # modules allowed to build jitted executables (rule: jit-scope)
 JIT_ALLOWLIST = {
@@ -165,6 +171,93 @@ def check_dispatch_pairing(src: Path) -> List[Violation]:
                     str(ops_py.parent), 1, "dispatch-pairing",
                     "kernel package has no ref.py oracle for the "
                     "ref dispatch tier",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel-contract
+# ---------------------------------------------------------------------------
+
+
+def check_kernel_contract(src: Path) -> List[Violation]:
+    out: List[Violation] = []
+    kdir = src / "kernels"
+    if kdir.is_dir():
+        for ops_py in sorted(kdir.glob("*/ops.py")):
+            tree = _parse(ops_py)
+            has_contract = False
+            for node in tree.body:
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                    if isinstance(node, ast.AnnAssign)
+                    else []
+                )
+                if (
+                    any(
+                        isinstance(t, ast.Name) and t.id == "CONTRACT"
+                        for t in targets
+                    )
+                    and isinstance(getattr(node, "value", None), ast.Call)
+                    and (
+                        getattr(node.value.func, "id", None)
+                        == "KernelContract"
+                        or getattr(node.value.func, "attr", None)
+                        == "KernelContract"
+                    )
+                ):
+                    has_contract = True
+            if not has_contract:
+                out.append(Violation(
+                    str(ops_py), 1, "kernel-contract",
+                    "kernel ops.py declares no module-level CONTRACT = "
+                    "KernelContract(...) — the static certifier "
+                    "(repro.analysis.kernelcheck) has nothing to prove",
+                ))
+
+    kern = src / "core" / "kernels.py"
+    if kern.exists():
+        tree = _parse(kern)
+        ops: List[str] = []
+        modules: dict = {}
+        line = 1
+        for node in ast.walk(tree):
+            targets = (
+                node.targets
+                if isinstance(node, ast.Assign)
+                else [node.target]
+                if isinstance(node, ast.AnnAssign)
+                else []
+            )
+            names = {
+                t.id for t in targets if isinstance(t, ast.Name)
+            }
+            if not names or getattr(node, "value", None) is None:
+                continue
+            if "DISPATCH_OPS" in names:
+                try:
+                    ops = list(ast.literal_eval(node.value))
+                except ValueError:
+                    pass
+            if "_CONTRACT_MODULES" in names:
+                line = node.lineno
+                try:
+                    modules = dict(ast.literal_eval(node.value))
+                except ValueError:
+                    out.append(Violation(
+                        str(kern), node.lineno, "kernel-contract",
+                        "_CONTRACT_MODULES must be a literal dict of "
+                        "op -> contract module path",
+                    ))
+        for op in ops:
+            if op not in modules:
+                out.append(Violation(
+                    str(kern), line, "kernel-contract",
+                    f"dispatch op {op!r} has no entry in "
+                    "_CONTRACT_MODULES — kernelcheck cannot load its "
+                    "KernelContract",
                 ))
     return out
 
@@ -328,6 +421,7 @@ def check_task_retention(src: Path) -> List[Violation]:
 
 ALL_CHECKS = (
     check_dispatch_pairing,
+    check_kernel_contract,
     check_cache_key,
     check_jit_scope,
     check_planner_pure,
